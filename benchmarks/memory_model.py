@@ -1,0 +1,56 @@
+"""Paper Fig. 4 + Table 4: per-device memory — DP vs ZeRO-3 vs hpZ vs MiCS.
+
+Analytic reproduction of the paper's memory analysis with this repo's
+actual byte layout (fp32 master IS the parameter buffer: K = 4 master +
+4+4 moments = 12 B/param fp32, or 4+2+2 = 8 B/param with bf16 moments),
+plus the paper's Table 4 OOM argument evaluated against v5e's 16 GB.
+"""
+from __future__ import annotations
+
+GB = 1 << 30
+
+
+def per_device_bytes(n_params: float, world: int, secondary: int,
+                     scheme: str, k_bytes: float = 12.0) -> float:
+    """Persistent model-state bytes per device (no activations)."""
+    M2 = 2.0 * n_params            # bf16 weights
+    opt = k_bytes * n_params       # master + moments (fp32 path)
+    if scheme == "dp":             # replicate everything
+        return M2 + opt
+    if scheme == "zero3":
+        return (M2 + opt) / world
+    if scheme == "hpz":            # + secondary bf16 copy per group
+        return (M2 + opt) / world + M2 / secondary
+    if scheme == "mics":           # ALL state replicated per group
+        return (M2 + opt) / secondary
+    raise ValueError(scheme)
+
+
+def main():
+    print("# Fig 4 analogue: 100B model, world=1024, secondary group=16")
+    print("scheme,bytes_per_device_gb,vs_zero3")
+    n, world, sec = 100e9, 1024, 16
+    z3 = per_device_bytes(n, world, sec, "zero3")
+    for scheme in ("dp", "zero3", "hpz", "mics"):
+        b = per_device_bytes(n, world, sec, scheme)
+        print(f"{scheme},{b/GB:.2f},{b/z3:.1f}x")
+
+    print("# Table 4 analogue: hpZ vs MiCS fit on one node group (16 chips)")
+    print("model,scheme,bytes_gb,fits_16gb_hbm(+4gb_act)")
+    for name, n in (("7.5B", 7.5e9), ("18B", 18e9)):
+        for scheme in ("zero3", "hpz", "mics"):
+            b = per_device_bytes(n, 64, 16, scheme)
+            fits = (b + 4 * GB) <= 16 * GB
+            print(f"{name},{scheme},{b/GB:.2f},{fits}")
+
+    print("# this repo's large-model policy (v5e 16GB): 235B on 256 chips")
+    n = 235e9
+    for k, tag in ((12.0, "fp32_moments"), (8.0, "bf16_moments")):
+        for scheme, sec in (("zero3", 16), ("hpz", 16), ("hpz", 256)):
+            b = per_device_bytes(n, 256, sec, scheme, k)
+            print(f"235B,{scheme}(sec={sec},{tag}),{b/GB:.2f},"
+                  f"{b <= 12 * GB}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""§Roofline table renderer: reads results/dryrun/*.json into the
+EXPERIMENTS.md table (per arch × shape: three roofline terms, dominant
+bottleneck, MODEL_FLOPS/HLO ratio, memory fit).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(out_dir: str = "results/dryrun", mesh: str = "16x16",
+         variant: str = "zeropp") -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        if d.get("mesh") != mesh or d.get("variant") != variant:
+            continue
+        rows.append(d)
+    rows.sort(key=lambda d: (d["arch"], SHAPE_ORDER.index(d["shape"])
+                             if d["shape"] in SHAPE_ORDER else 9))
+    return rows
+
+
+def fmt_ms(s: float) -> str:
+    return f"{s*1e3:.1f}"
+
+
+def render(rows: List[Dict], markdown: bool = False) -> str:
+    hdr = ("arch,shape,params_B,peak_GiB,fits,compute_ms,memory_ms,"
+           "coll_ici_ms,coll_dci_ms,dominant,useful_ratio,mfu_bound")
+    lines = [hdr]
+    for d in rows:
+        if d.get("skipped"):
+            lines.append(f"{d['arch']},{d['shape']},,,SKIP({d['why'][:40]})"
+                         ",,,,,,,")
+            continue
+        r = d["roofline"]
+        m = d["memory"]
+        lines.append(
+            f"{d['arch']},{d['shape']},{d['n_params']/1e9:.2f},"
+            f"{m.get('peak_bytes_per_device', 0)/2**30:.2f},"
+            f"{m.get('fits_16gb')},"
+            f"{fmt_ms(r['compute_s'])},{fmt_ms(r['memory_s'])},"
+            f"{fmt_ms(r['collective_ici_s'])},{fmt_ms(r['collective_dci_s'])},"
+            f"{r['dominant'].replace('_s','')},"
+            f"{r['useful_flops_ratio']:.2f},{r['mfu_bound']:.3f}")
+    if markdown:
+        out = []
+        for i, l in enumerate(lines):
+            out.append("| " + l.replace(",", " | ") + " |")
+            if i == 0:
+                out.append("|" + "---|" * (l.count(",") + 1))
+        return "\n".join(out)
+    return "\n".join(lines)
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--variant", default="zeropp")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    rows = load(args.out_dir, args.mesh, args.variant)
+    print(f"# Roofline table ({args.mesh}, {args.variant}): "
+          f"{len(rows)} cells")
+    print(render(rows, args.markdown))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Benchmark entry point: one section per paper table/figure.
+
+  comm_volume      — Table 1  (analytic + measured wire bytes)
+  throughput_model — Figs 11-13 / Table 2 (roofline model over bandwidth)
+  kernel_bench     — Table 3  (fused vs staged quantization pipeline)
+  memory_model     — Fig 4 / Table 4 (DP vs ZeRO-3 vs hpZ vs MiCS)
+  convergence      — Fig 14 / Table 5 (loss curves per variant)
+  roofline         — §Roofline table from the dry-run JSONs (if present)
+
+Run everything: PYTHONPATH=src python -m benchmarks.run
+Select sections: PYTHONPATH=src python -m benchmarks.run comm_volume ...
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (comm_volume, convergence, kernel_bench,
+                            memory_model, roofline, throughput_model)
+    sections = {
+        "comm_volume": comm_volume.main,
+        "throughput_model": throughput_model.main,
+        "kernel_bench": kernel_bench.main,
+        "memory_model": memory_model.main,
+        "convergence": convergence.main,
+    }
+    pick = [a for a in sys.argv[1:] if a in sections] or list(sections)
+    failures = []
+    for name in pick:
+        print(f"\n===== {name} =====")
+        t0 = time.time()
+        try:
+            sections[name]()
+            print(f"[{name} done in {time.time()-t0:.0f}s]")
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+
+    if not sys.argv[1:] or "roofline" in sys.argv[1:]:
+        print("\n===== roofline =====")
+        try:
+            from benchmarks import roofline as rl
+            rows = rl.load()
+            print(rl.render(rows))
+        except Exception:
+            traceback.print_exc()
+
+    if failures:
+        raise SystemExit(f"benchmark sections failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

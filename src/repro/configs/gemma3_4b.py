@@ -1,0 +1,12 @@
+"""Architecture config (see assignment block + cited source)."""
+from repro.configs.base import ArchConfig
+
+
+# 5:1 local:global, 128k context [hf:google/gemma-3-4b]
+CONFIG_GEMMA3_4B = ArchConfig(
+    name="gemma3-4b", family="dense", n_layers=34, d_model=2560,
+    vocab=262144, pattern=("local",) * 5 + ("attn",), n_heads=8,
+    n_kv_heads=4, head_dim=256, qk_norm=True, d_ff=10240, act="gelu",
+    window=1024, rope_theta=1e6, long_context=True,
+    note="5:1 local:global -> decode KV dominated by 1k-window ring buffers")
+gemma3_4b = CONFIG_GEMMA3_4B

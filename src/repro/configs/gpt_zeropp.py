@@ -1,0 +1,16 @@
+"""Architecture config (see assignment block + cited source)."""
+from repro.configs.base import ArchConfig
+
+
+# --- paper's own GPT-style configs (for benchmarks) --------------------------
+CONFIG_GPT_350M = ArchConfig(
+    name="gpt-350m", family="dense", n_layers=24, d_model=1024, vocab=50304,
+    pattern=("attn",), n_heads=16, n_kv_heads=16, head_dim=64, d_ff=4096,
+    note="paper §5.4 convergence model")
+gpt_350m = CONFIG_GPT_350M
+
+CONFIG_GPT_18B = ArchConfig(
+    name="gpt-18b", family="dense", n_layers=40, d_model=6144, vocab=50304,
+    pattern=("attn",), n_heads=48, n_kv_heads=48, head_dim=128, d_ff=24576,
+    note="paper §5.2 scalability model")
+gpt_18b = CONFIG_GPT_18B

@@ -1,0 +1,12 @@
+"""Architecture config (see assignment block + cited source)."""
+from repro.configs.base import ArchConfig
+
+
+# --- audio ------------------------------------------------------------------
+# decoder-only over EnCodec tokens [arXiv:2306.05284]; frontend stubbed
+CONFIG_MUSICGEN_LARGE = ArchConfig(
+    name="musicgen-large", family="audio", n_layers=48, d_model=2048,
+    vocab=2048, pattern=("attn",), n_heads=32, n_kv_heads=32, head_dim=64,
+    d_ff=8192, embed_inputs=True,
+    note="backbone only; EnCodec frame embeddings provided by input stub")
+musicgen_large = CONFIG_MUSICGEN_LARGE

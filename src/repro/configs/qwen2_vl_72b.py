@@ -1,0 +1,13 @@
+"""Architecture config (see assignment block + cited source)."""
+from repro.configs.base import ArchConfig
+
+
+# --- vlm --------------------------------------------------------------------
+# M-RoPE, dynamic resolution [arXiv:2409.12191]; patch frontend stubbed
+CONFIG_QWEN2_VL_72B = ArchConfig(
+    name="qwen2-vl-72b", family="vlm", n_layers=80, d_model=8192,
+    vocab=152064, pattern=("attn",), n_heads=64, n_kv_heads=8, head_dim=128,
+    qkv_bias=True, mrope=True, pos_streams=3, d_ff=29568, rope_theta=1e6,
+    embed_inputs=True,
+    note="backbone only; patch embeddings + (t,h,w) positions from stub")
+qwen2_vl_72b = CONFIG_QWEN2_VL_72B

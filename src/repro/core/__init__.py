@@ -1,0 +1,1 @@
+from repro.core import collectives, quant  # noqa: F401

@@ -1,0 +1,218 @@
+"""Blockwise symmetric quantization — the numerical core of qwZ / qgZ.
+
+The paper (§3.1, Fig. 2) uses block-based symmetric quantization: each
+contiguous block of elements gets an independent scale ``max|x| / qmax`` so
+that outliers only poison their own block.  INT8 is used for weight
+all-gather (qwZ) and INT4 (packed two-per-int8) for gradient all-to-all
+(qgZ).
+
+Everything here is pure jnp and shape-polymorphic; the Pallas kernels in
+``repro.kernels`` implement the same math for the TPU hot path and are
+checked against these functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_QMAX = {8: 127.0, 4: 7.0}
+
+# Flat buffers above this many elements are (de)quantized in segments via
+# lax.map: numerically identical (elementwise math is unchanged), but the
+# fp32 intermediates materialize one segment at a time instead of as a
+# full-buffer temporary — multi-GB gathered weight buffers would otherwise
+# spike peak memory during the quant pipeline.  Mirrors the Pallas kernels'
+# tile streaming.
+_SEG_ELEMS = 1 << 23
+
+
+def _segments(n: int, block: int, target: int = _SEG_ELEMS) -> int:
+    """Largest segment count such that n/nseg is a multiple of block and
+    <= target elements; 1 means no segmentation."""
+    if n <= target or n % block:
+        return 1
+    nb = n // block
+    best = 1
+    for nseg in range(2, nb + 1):
+        if nb % nseg == 0 and n // nseg <= target:
+            return nseg
+        if nb % nseg == 0:
+            best = nseg
+    return best
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Static description of a blockwise quantization scheme."""
+
+    bits: int = 8              # 8 (qwZ default) or 4 (qgZ default)
+    block_size: int = 256      # elements per scale block
+    stochastic: bool = False   # stochastic rounding (beyond-paper option)
+
+    def __post_init__(self):
+        if self.bits not in (4, 8):
+            raise ValueError(f"bits must be 4 or 8, got {self.bits}")
+        if self.block_size % 2:
+            raise ValueError("block_size must be even (int4 packing)")
+
+    @property
+    def qmax(self) -> float:
+        return _QMAX[self.bits]
+
+    @property
+    def packed_block(self) -> int:
+        """Bytes of payload per block."""
+        return self.block_size if self.bits == 8 else self.block_size // 2
+
+    def payload_bytes(self, n: int) -> int:
+        """Communication payload (quantized values only) for n elements."""
+        return n if self.bits == 8 else n // 2
+
+    def wire_bytes(self, n: int, scale_bytes: int = 2) -> int:
+        """Payload + scales actually moved on the wire for n elements."""
+        nblocks = -(-n // self.block_size)
+        return self.payload_bytes(n) + nblocks * scale_bytes
+
+
+def pad_to_block(x: Array, block_size: int) -> Array:
+    """Pad a 1-D array so its length is a multiple of ``block_size``."""
+    n = x.shape[-1]
+    rem = (-n) % block_size
+    if rem:
+        pad = [(0, 0)] * (x.ndim - 1) + [(0, rem)]
+        x = jnp.pad(x, pad)
+    return x
+
+
+def _round(x: Array, stochastic: bool, key: Optional[Array]) -> Array:
+    if not stochastic:
+        return jnp.round(x)
+    assert key is not None, "stochastic rounding needs a PRNG key"
+    lo = jnp.floor(x)
+    p_up = x - lo
+    u = jax.random.uniform(key, x.shape, dtype=x.dtype)
+    return lo + (u < p_up).astype(x.dtype)
+
+
+def quantize_blockwise(
+    x: Array,
+    cfg: QuantConfig,
+    key: Optional[Array] = None,
+) -> Tuple[Array, Array]:
+    """Quantize the trailing dimension of ``x`` blockwise.
+
+    Args:
+      x: float array; trailing dim must be a multiple of ``cfg.block_size``.
+      cfg: quantization config.
+      key: PRNG key, required iff ``cfg.stochastic``.
+
+    Returns:
+      (payload, scales):
+        payload: int8 array.  For bits=8 same trailing length as x; for
+          bits=4 trailing length halved (two nibbles per byte).
+        scales: float32, shape ``x.shape[:-1] + (n_blocks,)``.
+    """
+    n = x.shape[-1]
+    if n % cfg.block_size:
+        raise ValueError(f"trailing dim {n} not a multiple of block {cfg.block_size}")
+
+    if key is None:
+        if x.ndim == 1:
+            nseg = _segments(n, cfg.block_size)
+            if nseg > 1:
+                seg = n // nseg
+                p, s = jax.lax.map(lambda xs: quantize_blockwise(xs, cfg),
+                                   x.reshape(nseg, seg))
+                return p.reshape(-1), s.reshape(-1)
+        elif x.size > _SEG_ELEMS and n <= _SEG_ELEMS:
+            # multi-dim (e.g. qgZ's (Y, X, L) slices): map over flattened
+            # leading rows so the fp32 intermediate is one row at a time
+            lead = x.shape[:-1]
+            rows = x.reshape(-1, n)
+            p, s = jax.lax.map(lambda r: quantize_blockwise(r, cfg), rows)
+            return (p.reshape(*lead, -1), s.reshape(*lead, -1))
+
+    nblocks = n // cfg.block_size
+    xb = x.reshape(*x.shape[:-1], nblocks, cfg.block_size).astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    scale = absmax / cfg.qmax
+    inv = jnp.where(scale > 0, 1.0 / jnp.where(scale > 0, scale, 1.0), 0.0)
+    q = _round(xb * inv, cfg.stochastic, key)
+    q = jnp.clip(q, -cfg.qmax, cfg.qmax).astype(jnp.int8)
+    q = q.reshape(*x.shape[:-1], n)
+    if cfg.bits == 4:
+        q = pack_int4(q)
+    return q, scale.squeeze(-1)
+
+
+def dequantize_blockwise(
+    payload: Array,
+    scales: Array,
+    cfg: QuantConfig,
+    out_dtype: jnp.dtype = jnp.float32,
+) -> Array:
+    """Inverse of :func:`quantize_blockwise`."""
+    if payload.ndim == 1:
+        n = payload.shape[-1] * (2 if cfg.bits == 4 else 1)
+        nseg = _segments(n, cfg.block_size)
+        if nseg > 1:
+            pay = payload.reshape(nseg, -1)
+            sc = scales.reshape(nseg, -1)
+            x = jax.lax.map(
+                lambda ps: dequantize_blockwise(ps[0], ps[1], cfg, out_dtype),
+                (pay, sc))
+            return x.reshape(-1)
+    q = unpack_int4(payload) if cfg.bits == 4 else payload
+    n = q.shape[-1]
+    nblocks = n // cfg.block_size
+    qb = q.reshape(*q.shape[:-1], nblocks, cfg.block_size)
+    x = qb.astype(jnp.float32) * scales[..., None]
+    return x.reshape(*q.shape[:-1], n).astype(out_dtype)
+
+
+def pack_int4(q: Array) -> Array:
+    """Pack int8 values in [-8, 7] two-per-byte along the trailing dim."""
+    lo = q[..., 0::2] & 0xF
+    hi = (q[..., 1::2] & 0xF) << 4
+    return (lo | hi).astype(jnp.int8)
+
+
+def unpack_int4(p: Array) -> Array:
+    """Unpack nibbles packed by :func:`pack_int4` (sign-extending)."""
+    lo = (p << 4) >> 4  # arithmetic shifts on int8 sign-extend the low nibble
+    hi = p >> 4
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*p.shape[:-1], p.shape[-1] * 2)
+
+
+def quantize_global(x: Array, bits: int = 8) -> Tuple[Array, Array]:
+    """Non-blocked (single-scale) quantization — the paper's Fig. 2 baseline.
+
+    Used only for the convergence ablation (Fig. 14: non-blocked diverges).
+    """
+    qmax = _QMAX[bits]
+    absmax = jnp.max(jnp.abs(x))
+    scale = (absmax / qmax).astype(jnp.float32)
+    inv = jnp.where(scale > 0, 1.0 / jnp.where(scale > 0, scale, 1.0), 0.0)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) * inv), -qmax, qmax).astype(jnp.int8)
+    if bits == 4:
+        q = pack_int4(q)
+    return q, scale
+
+
+def dequantize_global(q: Array, scale: Array, bits: int = 8,
+                      out_dtype: jnp.dtype = jnp.float32) -> Array:
+    if bits == 4:
+        q = unpack_int4(q)
+    return (q.astype(jnp.float32) * scale).astype(out_dtype)
+
+
+def quantization_error(x: Array, cfg: QuantConfig) -> Array:
+    """Max-abs roundtrip error; used by tests and the Fig. 2 benchmark."""
+    q, s = quantize_blockwise(x, cfg)
+    return jnp.max(jnp.abs(dequantize_blockwise(q, s, cfg) - x.astype(jnp.float32)))

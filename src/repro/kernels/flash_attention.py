@@ -1,0 +1,268 @@
+"""Pallas TPU flash attention (forward + backward).
+
+Beyond-paper §Perf optimization: the XLA-level chunked-softmax attention in
+models/attention.py materializes the (B,H,Sq,kc) logit tiles in HBM at
+every dot boundary — for the train/prefill shapes that traffic DOMINATES
+the roofline memory term.  This kernel keeps each (q-tile × kv-tile) logit
+block in VMEM; HBM sees only Q/K/V/O (+ the m/l softmax stats).
+
+Tiling: grid (B, H, Sq/bq, S/bk) with the kv axis innermost; the output
+blocks for a q-tile map to the same slot for every kv step, so Pallas keeps
+them VMEM-resident as running (acc, m, l) state — no scratch needed.  GQA
+folds the head-group mapping into the K/V index_map (no materialized
+repeat).  Masking (causal / sliding window / softcap) matches
+models/attention.py, and the backward recomputes logits per tile (standard
+flash backward: dq on a q-major grid, dk/dv on a kv-major grid).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def _masked_logits(q, k, q0, k0, bq, bk, scale, causal, window, softcap):
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale
+    if softcap:
+        logits = jnp.tanh(logits / softcap) * softcap
+    q_pos = q0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = k0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    m = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        m &= q_pos >= k_pos
+    if window:
+        m &= q_pos - k_pos < window
+    return jnp.where(m, logits, NEG_INF)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref,
+                *, scale, causal, window, softcap, bq, bk, nk):
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]
+    k = k_ref[0, 0]
+    v = v_ref[0, 0]
+    logits = _masked_logits(q, k, pl.program_id(2) * bq, j * bk, bq, bk,
+                            scale, causal, window, softcap)
+    m_prev = m_ref[0, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+    p = jnp.exp(logits - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[0, 0] = l_ref[0, 0] * corr + jnp.sum(p, axis=-1)
+    m_ref[0, 0] = m_new
+    acc_ref[0, 0] = acc_ref[0, 0] * corr[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def flash_fwd_pallas(q: Array, kg: Array, vg: Array, *, scale: float,
+                     causal: bool = True, window: int = 0,
+                     softcap: float = 0.0, bq: int = 512, bk: int = 512,
+                     interpret: bool = False
+                     ) -> Tuple[Array, Array, Array]:
+    """q: (B,Sq,H,hd); kg/vg: (B,S,K,hd).  Returns (out (B,Sq,H,hd), m, l).
+
+    out = acc/l is finished outside the kernel (acc accumulates fp32 in the
+    output block, which stays VMEM-resident across the inner kv steps).
+    """
+    B, Sq, H, hd = q.shape
+    S, K = kg.shape[1], kg.shape[2]
+    bq = min(bq, Sq)
+    bk = min(bk, S)
+    assert Sq % bq == 0 and S % bk == 0, (Sq, S, bq, bk)
+    rep = H // K
+    grid = (B, H, Sq // bq, S // bk)
+
+    kernel = functools.partial(_fwd_kernel, scale=scale, causal=causal,
+                               window=window, softcap=softcap, bq=bq, bk=bk,
+                               nk=S // bk)
+    qs = jnp.swapaxes(q, 1, 2)          # (B,H,Sq,hd)
+    ks = jnp.swapaxes(kg, 1, 2)         # (B,K,S,hd)
+    vs = jnp.swapaxes(vg, 1, 2)
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j: (b, h // rep, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j: (b, h // rep, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, i, j: (b, h, i)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, i, j: (b, h, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, Sq, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, Sq), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, Sq), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qs, ks, vs)
+    l = jnp.maximum(l, 1e-30)
+    out = (acc / l[..., None]).astype(q.dtype)
+    return jnp.swapaxes(out, 1, 2), m, l
+
+
+# ---------------------------------------------------------------------------
+# backward
+# ---------------------------------------------------------------------------
+
+def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, m_ref, l_ref, dsum_ref,
+                   dq_ref, *, scale, causal, window, softcap, bq, bk):
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        dq_ref[...] = jnp.zeros_like(dq_ref)
+
+    q = q_ref[0, 0]
+    k = k_ref[0, 0]
+    v = v_ref[0, 0]
+    logits = _masked_logits(q, k, pl.program_id(2) * bq, j * bk, bq, bk,
+                            scale, causal, window, softcap)
+    p = jnp.exp(logits - m_ref[0, 0][:, None]) / l_ref[0, 0][:, None]
+    do = do_ref[0, 0].astype(jnp.float32)
+    dp = jax.lax.dot_general(do, v.astype(jnp.float32),
+                             (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    dl = p * (dp - dsum_ref[0, 0][:, None])
+    if softcap:
+        t = logits / softcap
+        dl = dl * jnp.where(logits <= NEG_INF / 2, 0.0, 1.0 - t * t)
+    dq_ref[0, 0] += jax.lax.dot_general(
+        dl, k.astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale
+
+
+def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, m_ref, l_ref, dsum_ref,
+                    dk_ref, dv_ref, *, scale, causal, window, softcap,
+                    bq, bk, rep):
+    # grid (B, K, nkv, rep, nq): the dk/dv block index (b, g, j) is constant
+    # across the two innermost dims, so the accumulator block stays
+    # VMEM-resident for its whole reduction (consecutive revisits only).
+    r = pl.program_id(3)   # head within the GQA group
+    i = pl.program_id(4)   # q tile (innermost)
+
+    @pl.when((i == 0) & (r == 0))
+    def _init():
+        dk_ref[...] = jnp.zeros_like(dk_ref)
+        dv_ref[...] = jnp.zeros_like(dv_ref)
+
+    q = q_ref[0, 0]
+    k = k_ref[0, 0]
+    v = v_ref[0, 0]
+    logits = _masked_logits(q, k, i * bq, pl.program_id(2) * bk, bq, bk,
+                            scale, causal, window, softcap)
+    p = jnp.exp(logits - m_ref[0, 0][:, None]) / l_ref[0, 0][:, None]
+    do = do_ref[0, 0].astype(jnp.float32)
+    dv_ref[0, 0] += jax.lax.dot_general(
+        p, do, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    dp = jax.lax.dot_general(do, v.astype(jnp.float32),
+                             (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    dl = p * (dp - dsum_ref[0, 0][:, None])
+    if softcap:
+        t = logits / softcap
+        dl = dl * jnp.where(logits <= NEG_INF / 2, 0.0, 1.0 - t * t)
+    dk_ref[0, 0] += jax.lax.dot_general(
+        dl, q.astype(jnp.float32), (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale
+
+
+def flash_bwd_pallas(q, kg, vg, out, m, l, dout, *, scale, causal=True,
+                     window=0, softcap=0.0, bq=512, bk=512,
+                     interpret=False):
+    """Returns (dq, dkg, dvg) matching flash_fwd_pallas inputs."""
+    B, Sq, H, hd = q.shape
+    S, K = kg.shape[1], kg.shape[2]
+    bq = min(bq, Sq)
+    bk = min(bk, S)
+    rep = H // K
+    qs = jnp.swapaxes(q, 1, 2)
+    ks = jnp.swapaxes(kg, 1, 2)
+    vs = jnp.swapaxes(vg, 1, 2)
+    dos = jnp.swapaxes(dout, 1, 2)
+    os_ = jnp.swapaxes(out, 1, 2)
+    dsum = jnp.sum(dos.astype(jnp.float32) * os_.astype(jnp.float32),
+                   axis=-1)                        # (B,H,Sq)
+
+    # ---- dq: grid (B, H, nq, nk), kv innermost --------------------------
+    kdq = functools.partial(_bwd_dq_kernel, scale=scale, causal=causal,
+                            window=window, softcap=softcap, bq=bq, bk=bk)
+    dq = pl.pallas_call(
+        kdq,
+        grid=(B, H, Sq // bq, S // bk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j: (b, h // rep, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j: (b, h // rep, j, 0)),
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, i, j: (b, h, i)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, i, j: (b, h, i)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, i, j: (b, h, i)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), jnp.float32),
+        interpret=interpret,
+    )(qs, ks, vs, dos, m, l, dsum)
+
+    # ---- dk/dv: grid (B, K, nkv, rep, nq); heads fold onto K groups ----
+    kdkv = functools.partial(_bwd_dkv_kernel, scale=scale, causal=causal,
+                             window=window, softcap=softcap, bq=bq, bk=bk,
+                             rep=rep)
+    dk, dv = pl.pallas_call(
+        kdkv,
+        grid=(B, K, S // bk, rep, Sq // bq),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd),
+                         lambda b, g, j, r, i: (b, g * rep + r, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, g, j, r, i: (b, g, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, g, j, r, i: (b, g, j, 0)),
+            pl.BlockSpec((1, 1, bq, hd),
+                         lambda b, g, j, r, i: (b, g * rep + r, i, 0)),
+            pl.BlockSpec((1, 1, bq),
+                         lambda b, g, j, r, i: (b, g * rep + r, i)),
+            pl.BlockSpec((1, 1, bq),
+                         lambda b, g, j, r, i: (b, g * rep + r, i)),
+            pl.BlockSpec((1, 1, bq),
+                         lambda b, g, j, r, i: (b, g * rep + r, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bk, hd), lambda b, g, j, r, i: (b, g, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, g, j, r, i: (b, g, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, K, S, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, K, S, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qs, ks, vs, dos, m, l, dsum)
+
+    dq = jnp.swapaxes(dq, 1, 2).astype(q.dtype)
+    dkg = jnp.swapaxes(dk, 1, 2).astype(kg.dtype)
+    dvg = jnp.swapaxes(dv, 1, 2).astype(vg.dtype)
+    return dq, dkg, dvg

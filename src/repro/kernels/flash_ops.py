@@ -1,0 +1,49 @@
+"""jit-ready wrapper around the Pallas flash-attention kernels.
+
+``flash_attention_kernel`` is a custom_vjp whose forward/backward run the
+Pallas kernels (compiled on TPU; interpret mode elsewhere).  Restriction:
+queries must start at position 0 (no sequence-parallel offset) — the
+dry-run's batch-first layout satisfies this; models/attention.py falls back
+to the jnp flash path when a sequence offset exists.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_bwd_pallas, flash_fwd_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def flash_attention_kernel(q, kg, vg, scale, causal, window, softcap,
+                           bq=512, bk=512):
+    out, _, _ = flash_fwd_pallas(q, kg, vg, scale=scale, causal=causal,
+                                 window=window, softcap=softcap, bq=bq,
+                                 bk=bk, interpret=_interpret())
+    return out
+
+
+def _fwd(q, kg, vg, scale, causal, window, softcap, bq, bk):
+    out, m, l = flash_fwd_pallas(q, kg, vg, scale=scale, causal=causal,
+                                 window=window, softcap=softcap, bq=bq,
+                                 bk=bk, interpret=_interpret())
+    return out, (q, kg, vg, out, m, l)
+
+
+def _bwd(scale, causal, window, softcap, bq, bk, res, dout):
+    q, kg, vg, out, m, l = res
+    dq, dkg, dvg = flash_bwd_pallas(q, kg, vg, out, m, l, dout, scale=scale,
+                                    causal=causal, window=window,
+                                    softcap=softcap, bq=bq, bk=bk,
+                                    interpret=_interpret())
+    return dq, dkg, dvg
+
+
+flash_attention_kernel.defvjp(_fwd, _bwd)

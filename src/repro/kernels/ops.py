@@ -1,0 +1,102 @@
+"""Backend-dispatching wrappers over the quantization kernels.
+
+Hot-path quantization call sites (core/collectives.py) go through this
+module: on TPU they hit the Pallas kernels; on CPU (tests, dry-run,
+benchmarks) they hit the pure-jnp reference, which is numerically identical
+(the kernel tests prove it bit-exactly for round-to-nearest-even inputs).
+
+``FORCE`` pins the implementation for tests/benchmarks:
+  None       -> by backend (tpu: pallas, else ref)
+  "ref"      -> pure jnp always
+  "pallas"   -> compiled pallas (TPU only)
+  "interpret"-> pallas interpret mode (runs the kernel body on CPU; used by
+                the kernel-vs-ref test sweeps)
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantConfig
+from repro.kernels import ref as _ref
+from repro.kernels import quant_block as _qb
+from repro.kernels import fused_dequant_reduce_quant as _fq
+
+Array = jax.Array
+
+FORCE: Optional[str] = None
+
+
+def _mode() -> str:
+    if FORCE is not None:
+        return FORCE
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _as2d(x: Array) -> Tuple[Array, Tuple[int, ...]]:
+    lead = x.shape[:-1]
+    n = 1
+    for s in lead:
+        n *= s
+    return x.reshape(n, x.shape[-1]), lead
+
+
+def quantize_blockwise(x: Array, cfg: QuantConfig,
+                       key: Optional[Array] = None) -> Tuple[Array, Array]:
+    mode = _mode()
+    if mode == "ref" or cfg.stochastic or key is not None:
+        from repro.core.quant import quantize_blockwise as q
+        return q(x, cfg, key)
+    x2, lead = _as2d(x)
+    p, s = _qb.quantize_pallas(x2, cfg, interpret=(mode == "interpret"))
+    return p.reshape(*lead, p.shape[-1]), s.reshape(*lead, s.shape[-1])
+
+
+def dequantize_blockwise(payload: Array, scales: Array, cfg: QuantConfig,
+                         out_dtype=jnp.float32) -> Array:
+    mode = _mode()
+    if mode == "ref":
+        from repro.core.quant import dequantize_blockwise as d
+        return d(payload, scales, cfg, out_dtype)
+    p2, lead = _as2d(payload)
+    s2, _ = _as2d(scales)
+    x = _qb.dequantize_pallas(p2, s2, cfg, out_dtype,
+                              interpret=(mode == "interpret"))
+    return x.reshape(*lead, x.shape[-1])
+
+
+def quantize_reordered(x: Array, cfg: QuantConfig,
+                       key: Optional[Array] = None) -> Tuple[Array, Array]:
+    """(Y, X, L) -> transpose to (X, Y, L), quantize trailing dim (fused)."""
+    mode = _mode()
+    if mode == "ref" or cfg.stochastic or key is not None:
+        xt = jnp.swapaxes(x, 0, 1)
+        from repro.core.quant import quantize_blockwise as q
+        return q(xt, cfg, key)
+    return _qb.quantize_reordered_pallas(x, cfg,
+                                         interpret=(mode == "interpret"))
+
+
+def dequant_reduce(payload: Array, scales: Array, cfg: QuantConfig,
+                   out_dtype=jnp.float32) -> Array:
+    """Sum N quantized contributions in fp32: (N, P), (N, NB) -> (C,)."""
+    mode = _mode()
+    if mode == "ref":
+        return _ref.dequant_reduce_ref(payload, scales, cfg, out_dtype)
+    return _fq.dequant_reduce_pallas(payload, scales, cfg, out_dtype,
+                                     interpret=(mode == "interpret"))
+
+
+def dequant_reduce_quant(payload: Array, scales: Array, cfg_in: QuantConfig,
+                         cfg_out: QuantConfig,
+                         key: Optional[Array] = None) -> Tuple[Array, Array]:
+    """Fused dequant -> fp32 reduce -> requant (qgZ intra-hop, §4.2)."""
+    mode = _mode()
+    if mode == "ref" or cfg_out.stochastic or key is not None:
+        acc = _ref.dequant_reduce_ref(payload, scales, cfg_in, jnp.float32)
+        from repro.core.quant import quantize_blockwise as q
+        return q(acc, cfg_out, key)
+    return _fq.dequant_reduce_quant_pallas(payload, scales, cfg_in, cfg_out,
+                                           interpret=(mode == "interpret"))

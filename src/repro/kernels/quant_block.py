@@ -1,0 +1,208 @@
+"""Pallas TPU kernels: blockwise quantize / dequantize (+ fused reorder).
+
+These are the TPU adaptation of the paper's custom CUDA quantization library
+(§4.2): the CUDA version chases vectorized 16B global-memory transactions
+and register-file blocking; the TPU version expresses the same intent as
+VMEM tiles shaped for the VPU — trailing (lane) dimension a multiple of 128,
+sublane tiles of 8 — so each ``pallas_call`` instance streams one HBM tile
+through VMEM exactly once.
+
+Layout contract (shared with core.quant): the quantization block is a run of
+``block_size`` *contiguous trailing* elements, and every tile holds an
+integer number of blocks, so scales never cross tile boundaries.
+
+The fused reorder+quant kernel implements the paper's "tensor slice
+reordering ... realized within a fused quantization and remapping kernel":
+the (Y, X, L) -> (X, Y, L) transpose of qgZ is folded into the input
+``BlockSpec.index_map``, so reordering costs zero extra memory traffic —
+the Pallas analogue of fusing the remap into the quant kernel's loads.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.quant import QuantConfig
+
+Array = jax.Array
+
+# TPU tiling constants: lane width 128, sublane 8 (fp32) — tiles are chosen
+# as multiples of these so the MXU/VPU see hardware-aligned shapes.
+_LANE = 128
+_SUBLANE = 8
+_MAX_TILE_COLS = 4096  # cap the per-instance VMEM working set
+
+
+def _divisor_at_most(n: int, cap: int) -> int:
+    """Largest divisor of n that is <= cap."""
+    best = 1
+    for d in range(1, int(n ** 0.5) + 1):
+        if n % d == 0:
+            for c in (d, n // d):
+                if c <= cap and c > best:
+                    best = c
+    return best
+
+
+def pick_tiles(rows: int, cols: int, block: int) -> Tuple[int, int]:
+    """(row_tile, col_tile): col_tile holds whole quant blocks, lane-friendly."""
+    nb = cols // block
+    max_blocks = max(1, _MAX_TILE_COLS // block)
+    cb = _divisor_at_most(nb, max_blocks)
+    rt = _divisor_at_most(rows, _SUBLANE)
+    return rt, cb * block
+
+
+# ---------------------------------------------------------------------------
+# quantize
+# ---------------------------------------------------------------------------
+
+def _quant_body(x, block: int, qmax: float, pack: bool):
+    """Shared math: (rt, ct) float tile -> (payload, scales)."""
+    rt, ct = x.shape
+    nb = ct // block
+    xb = x.astype(jnp.float32).reshape(rt, nb, block)
+    absmax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    scale = absmax / qmax
+    inv = jnp.where(scale > 0, 1.0 / jnp.where(scale > 0, scale, 1.0), 0.0)
+    q = jnp.clip(jnp.round(xb * inv), -qmax, qmax).astype(jnp.int8)
+    q = q.reshape(rt, ct)
+    if pack:  # int4: two nibbles per byte along the trailing dim
+        q2 = q.reshape(rt, ct // 2, 2)
+        q = ((q2[..., 0] & 0xF) | ((q2[..., 1] & 0xF) << 4)).astype(jnp.int8)
+    return q, scale.reshape(rt, nb)
+
+
+def _quant_kernel(x_ref, payload_ref, scale_ref, *, block, qmax, pack):
+    q, s = _quant_body(x_ref[...], block, qmax, pack)
+    payload_ref[...] = q
+    scale_ref[...] = s
+
+
+def quantize_pallas(x: Array, cfg: QuantConfig,
+                    interpret: bool = False) -> Tuple[Array, Array]:
+    """Blockwise quantize the trailing dim of a 2-D array.
+
+    x: (R, C) float, C % cfg.block_size == 0.
+    Returns (payload int8 (R, C or C//2), scales f32 (R, C//block)).
+    """
+    R, C = x.shape
+    block = cfg.block_size
+    assert C % block == 0, (C, block)
+    pack = cfg.bits == 4
+    rt, ct = pick_tiles(R, C, block)
+    nbt = ct // block
+    pt = ct // 2 if pack else ct
+    grid = (R // rt, C // ct)
+    kernel = functools.partial(_quant_kernel, block=block, qmax=cfg.qmax,
+                               pack=pack)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((rt, ct), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((rt, pt), lambda i, j: (i, j)),
+            pl.BlockSpec((rt, nbt), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, C // 2 if pack else C), jnp.int8),
+            jax.ShapeDtypeStruct((R, C // block), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+
+
+# ---------------------------------------------------------------------------
+# dequantize
+# ---------------------------------------------------------------------------
+
+def _dequant_body(p, s, block: int, pack: bool, out_dtype):
+    rt = p.shape[0]
+    if pack:
+        lo = (p << 4) >> 4   # arithmetic shift on int8 sign-extends
+        hi = p >> 4
+        p = jnp.stack([lo, hi], axis=-1).reshape(rt, p.shape[1] * 2)
+    ct = p.shape[1]
+    nb = ct // block
+    x = p.reshape(rt, nb, block).astype(jnp.float32) * s[..., None]
+    return x.reshape(rt, ct).astype(out_dtype)
+
+
+def _dequant_kernel(p_ref, s_ref, out_ref, *, block, pack, out_dtype):
+    out_ref[...] = _dequant_body(p_ref[...], s_ref[...], block, pack, out_dtype)
+
+
+def dequantize_pallas(payload: Array, scales: Array, cfg: QuantConfig,
+                      out_dtype=jnp.float32,
+                      interpret: bool = False) -> Array:
+    """Inverse of :func:`quantize_pallas`.  payload: (R, P); scales (R, NB)."""
+    R, P = payload.shape
+    pack = cfg.bits == 4
+    C = P * 2 if pack else P
+    block = cfg.block_size
+    rt, ct = pick_tiles(R, C, block)
+    nbt = ct // block
+    pt = ct // 2 if pack else ct
+    grid = (R // rt, C // ct)
+    kernel = functools.partial(_dequant_kernel, block=block, pack=pack,
+                               out_dtype=out_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rt, pt), lambda i, j: (i, j)),
+            pl.BlockSpec((rt, nbt), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((rt, ct), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((R, C), out_dtype),
+        interpret=interpret,
+    )(payload, scales)
+
+
+# ---------------------------------------------------------------------------
+# fused reorder (transpose) + quantize — qgZ step 1 (§3.3.3 + §4.2)
+# ---------------------------------------------------------------------------
+
+def _quant3_kernel(x_ref, payload_ref, scale_ref, *, block, qmax, pack):
+    x = x_ref[...]                     # (1, 1, ct) — one (x, y) slice tile
+    q, s = _quant_body(x.reshape(1, -1), block, qmax, pack)
+    payload_ref[...] = q.reshape(x_ref.shape[0], x_ref.shape[1], -1)
+    scale_ref[...] = s.reshape(x_ref.shape[0], x_ref.shape[1], -1)
+
+
+def quantize_reordered_pallas(x: Array, cfg: QuantConfig,
+                              interpret: bool = False) -> Tuple[Array, Array]:
+    """Transpose (Y, X, L) -> (X, Y, L) and quantize trailing dim, fused.
+
+    The transpose is expressed purely in the input ``index_map`` — the
+    kernel reads tile (y=j, x=i) while writing tile (i, j), so the reorder
+    rides along with the quantization loads (no separate transpose pass).
+    """
+    Y, X, L = x.shape
+    block = cfg.block_size
+    assert L % block == 0
+    pack = cfg.bits == 4
+    _, lt = pick_tiles(1, L, block)
+    nbt = lt // block
+    ptile = lt // 2 if pack else lt
+    grid = (X, Y, L // lt)
+    kernel = functools.partial(_quant3_kernel, block=block, qmax=cfg.qmax,
+                               pack=pack)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, 1, lt), lambda i, j, k: (j, i, k))],
+        out_specs=[
+            pl.BlockSpec((1, 1, ptile), lambda i, j, k: (i, j, k)),
+            pl.BlockSpec((1, 1, nbt), lambda i, j, k: (i, j, k)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((X, Y, L // 2 if pack else L), jnp.int8),
+            jax.ShapeDtypeStruct((X, Y, L // block), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)

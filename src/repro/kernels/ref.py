@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+The numerical definitions live in :mod:`repro.core.quant`; this module
+re-exports them under kernel-shaped signatures so each kernel's test sweeps
+``assert_allclose(kernel(interpret=True), ref)`` against one source of truth.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import (
+    QuantConfig,
+    dequantize_blockwise,
+    quantize_blockwise,
+)
+
+Array = jax.Array
+
+
+def quantize_ref(x: Array, cfg: QuantConfig) -> Tuple[Array, Array]:
+    """Blockwise symmetric quantization of the trailing dim."""
+    return quantize_blockwise(x, cfg)
+
+
+def dequantize_ref(payload: Array, scales: Array, cfg: QuantConfig,
+                   out_dtype=jnp.float32) -> Array:
+    return dequantize_blockwise(payload, scales, cfg, out_dtype)
+
+
+def quantize_reordered_ref(x: Array, cfg: QuantConfig) -> Tuple[Array, Array]:
+    """qgZ fused reorder+quant oracle: transpose (Y, X, L) -> (X, Y, L) then
+    quantize the trailing dim (paper §4.2 "tensor-reorder and quantization
+    fusion"; the transpose is Eq. (1)->(2) slice reordering)."""
+    xt = jnp.swapaxes(x, 0, 1)
+    return quantize_blockwise(xt, cfg)
+
+
+def dequant_reduce_ref(payload: Array, scales: Array, cfg: QuantConfig,
+                       out_dtype=jnp.float32) -> Array:
+    """Dequantize N contributions (leading dim) and sum in fp32.
+
+    Large inputs are processed in column segments (lax.map) so the fp32
+    dequantized intermediate never materializes whole — same tiling the
+    fused Pallas kernel uses.
+    """
+    N = payload.shape[0]
+    if payload.size > (1 << 23):
+        nb = scales.shape[-1]
+        npb = payload.shape[-1] // nb          # payload bytes per block
+        nseg = 1
+        for cand in range(2, nb + 1):
+            if nb % cand == 0 and payload.size // cand <= (1 << 23):
+                nseg = cand
+                break
+        if nseg > 1:
+            ps = payload.reshape(N, nseg, -1).swapaxes(0, 1)
+            ss = scales.reshape(N, nseg, -1).swapaxes(0, 1)
+            out = jax.lax.map(
+                lambda t: jnp.sum(dequantize_blockwise(t[0], t[1], cfg,
+                                                       jnp.float32), axis=0),
+                (ps, ss))
+            return out.reshape(-1).astype(out_dtype)
+    deq = dequantize_blockwise(payload, scales, cfg, jnp.float32)
+    return jnp.sum(deq, axis=0).astype(out_dtype)
+
+
+def dequant_reduce_quant_ref(
+    payload: Array, scales: Array, cfg_in: QuantConfig, cfg_out: QuantConfig,
+) -> Tuple[Array, Array]:
+    """qgZ inner fusion oracle (paper §4.2 "sequential dequantization,
+    reduction, and quantization ... single kernel"): dequant N contributions,
+    fp32 reduce, requantize the partial sums."""
+    acc = dequant_reduce_ref(payload, scales, cfg_in, jnp.float32)
+    return quantize_blockwise(acc, cfg_out)

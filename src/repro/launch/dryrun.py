@@ -1,0 +1,583 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import: jax pins the device
+# count at first backend init, and the production meshes need 512 host
+# placeholder devices (multi-pod 2x16x16; the single-pod 16x16 mesh uses the
+# first 256 of them).
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this builds the real distributed step (train_step for
+``train_*`` shapes, serve prefill/decode for the inference shapes) against
+ShapeDtypeStruct inputs (no allocation), compiles it, and extracts:
+
+  * ``compiled.memory_analysis()``  — proves the cell fits per-device HBM
+  * ``compiled.cost_analysis()``    — HLO FLOPs / bytes for §Roofline
+  * collective bytes parsed from the compiled HLO, split by interconnect
+    tier (model-ring / cross-data / cross-pod) — cost_analysis does not
+    report collectives, so we sum operand sizes per op ourselves and apply
+    ring-algorithm wire-volume formulas.
+
+Results are dumped as one JSON per cell; benchmarks/roofline.py renders the
+EXPERIMENTS.md tables from them.
+"""
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# hardware model (TPU v5e-like, per assignment)
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link (model/data tiers)
+DCI_BW = 6.25e9            # bytes/s per chip across pods (assumed, DESIGN.md)
+HBM_BYTES = 16 * 2 ** 30   # v5e HBM capacity
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+(\S+?)\(")
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+_GROUPS_V1_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+
+
+def _type_bytes(tstr: str) -> int:
+    """Bytes of an HLO type string (possibly a tuple)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(tstr):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _parse_groups(line: str) -> Optional[np.ndarray]:
+    """Replica groups as an (n_groups, group_size) id array, if present."""
+    m = _GROUPS_V1_RE.search(line)
+    if m:
+        groups = [[int(x) for x in g.split(",") if x]
+                  for g in re.findall(r"\{([^}]*)\}", m.group(1))]
+        width = max(len(g) for g in groups)
+        return np.array([g + [g[-1]] * (width - len(g)) for g in groups])
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        ng, gs = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        ids = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            perm = [int(x) for x in m.group(4).split(",")]
+            ids = ids.transpose(perm)
+        return ids.reshape(ng, gs)
+    return None
+
+
+def _group_tier(groups: Optional[np.ndarray], world: int,
+                multi_pod: bool) -> str:
+    """Which interconnect tier a collective's groups span.
+
+    Device layout is row-major over the mesh: id = ((pod·16)+data)·16+model.
+    """
+    if groups is None:
+        return "model"
+    g = groups
+    if multi_pod and np.ptp(g // 256, axis=1).max() > 0:
+        return "pod"
+    if np.ptp((g % 256) // 16, axis=1).max() > 0:
+        return "data"
+    return "model"
+
+
+def _wire_bytes(op: str, in_bytes: int, out_bytes: int, n: int) -> float:
+    """Ring-algorithm wire volume per device for one collective."""
+    if n <= 1:
+        return 0.0
+    if op == "all-gather":
+        return max(out_bytes - in_bytes, 0)
+    if op == "reduce-scatter":
+        return max(in_bytes - out_bytes, 0)
+    if op == "all-reduce":
+        return 2.0 * in_bytes * (n - 1) / n
+    if op == "all-to-all":
+        return in_bytes * (n - 1) / n
+    if op == "collective-permute":
+        return float(in_bytes)
+    return float(in_bytes)
+
+
+def parse_collectives(hlo_text: str, world: int, multi_pod: bool
+                      ) -> Dict[str, Any]:
+    """Sum collective operand/wire bytes per op type and per tier."""
+    sizes: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            sizes[m.group(1)] = _type_bytes(m.group(2))
+
+    per_op: Dict[str, Dict[str, float]] = {}
+    per_tier = {"model": 0.0, "data": 0.0, "pod": 0.0}
+    count = 0
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        opcode = m.group(3)
+        base = opcode.replace("-start", "")
+        if base not in _COLL_OPS:
+            continue
+        if opcode.endswith("-done"):
+            continue
+        count += 1
+        # operand list: %names inside the call parens
+        call = line[line.index(opcode + "(") + len(opcode) + 1:]
+        depth = 1
+        args = ""
+        for ch in call:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            args += ch
+        ops = re.findall(r"%([\w.\-]+)", args)
+        in_b = sum(sizes.get(o, 0) for o in ops)
+        out_b = _type_bytes(m.group(2))
+        groups = _parse_groups(line)
+        n = groups.shape[1] if groups is not None else world
+        tier = _group_tier(groups, world, multi_pod)
+        wire = _wire_bytes(base, in_b, out_b, n)
+        d = per_op.setdefault(base, {"count": 0, "operand_bytes": 0.0,
+                                     "wire_bytes": 0.0})
+        d["count"] += 1
+        d["operand_bytes"] += in_b
+        d["wire_bytes"] += wire
+        per_tier[tier] += wire
+    total_operand = sum(d["operand_bytes"] for d in per_op.values())
+    total_wire = sum(d["wire_bytes"] for d in per_op.values())
+    return {"per_op": per_op, "per_tier_wire": per_tier, "count": count,
+            "operand_bytes": total_operand, "wire_bytes": total_wire}
+
+
+# ---------------------------------------------------------------------------
+# cell construction
+# ---------------------------------------------------------------------------
+
+def _abstract(tree, mesh, specs):
+    """ShapeDtypeStructs with NamedShardings attached (zero allocation)."""
+    import jax
+    from jax.sharding import NamedSharding
+
+    def mk(leaf, spec):
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+    return jax.tree.map(mk, tree, specs)
+
+
+def train_batch_shapes(model, shape_cfg):
+    """GLOBAL abstract batch for a train step."""
+    import jax
+    import jax.numpy as jnp
+    cfg = model.cfg
+    B, S = shape_cfg.global_batch, shape_cfg.seq_len
+    out = {"targets": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cfg.embed_inputs:
+        out["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                             jnp.bfloat16)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cfg.mrope:
+        out["positions"] = jax.ShapeDtypeStruct((3, B, S), jnp.int32)
+    return out
+
+
+def serve_batch_shapes(model, B, S):
+    import jax
+    import jax.numpy as jnp
+    cfg = model.cfg
+    out = {}
+    if cfg.embed_inputs:
+        out["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                             jnp.bfloat16)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cfg.mrope:
+        out["positions"] = jax.ShapeDtypeStruct((3, B, S), jnp.int32)
+    return out
+
+
+def _jaxpr_info(fn, args, mesh):
+    import jax
+    from repro.launch.jaxpr_analysis import (analyze_jaxpr, shard_map_body,
+                                             _peak)
+    cj = jax.make_jaxpr(fn)(*args)
+    mesh_shape = dict(mesh.shape)
+    res = analyze_jaxpr(cj, mesh_shape)
+    res["peak_bytes"] = _peak(shard_map_body(cj))
+    return res
+
+
+def lower_cell(arch_name: str, shape_name: str, multi_pod: bool,
+               variant: str = "zeropp", serve_params_dtype=None,
+               want_jaxpr: bool = True, attn_impl: str = "xla",
+               accum: int = 0, serve_bits: int = 8,
+               ) -> Tuple[Any, Dict[str, Any]]:
+    """Build and lower one cell; returns (lowered, info).
+
+    info['jaxpr_analysis'] carries the true-dtype roofline inputs (see
+    jaxpr_analysis.py — the CPU backend's HLO upcasts bf16 to f32 and would
+    double every byte count)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import SHAPES, get_config, shape_supported
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.model import Model
+    from repro.optim.adamw import AdamWConfig
+    from repro.train import serve as serve_lib
+    from repro.train import trainer as trainer_lib
+    from repro.train.policy import make_policy
+
+    arch = get_config(arch_name)
+    shape = SHAPES[shape_name]
+    ok, why = shape_supported(arch, shape_name)
+    if not ok:
+        return None, {"skipped": True, "why": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    axes = tuple(mesh.axis_names)
+    world = int(np.prod(list(mesh.shape.values())))
+    overrides = {}
+    if shape.kind != "train" and serve_bits == 4:
+        # weight-only INT4 serving (qwZ with 4-bit payload, finer blocks)
+        overrides = dict(qwz_bits=4, qwz_block=128)
+    pol = make_policy(arch, axes, variant, **overrides)
+    model = Model(arch, pol.zcfg, world=world)
+    info: Dict[str, Any] = {
+        "skipped": False, "world": world, "axes": axes,
+        "n_params": model.n_params(), "n_active": model.n_active_params(),
+        "policy_note": pol.note, "variant": variant,
+        "hpz_axes": pol.zcfg.secondary_axes if pol.zcfg.hpz else None,
+    }
+
+    info["kind"] = shape.kind
+    if accum == 0 and shape.kind == "train":
+        accum = pol.train_accum          # policy default (memory fit)
+    accum = max(accum, 1)
+    info["accum_used"] = accum
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig(moments_dtype=pol.moments_dtype)
+        ts = trainer_lib.build_train_step(model, mesh, opt_cfg, donate=True,
+                                          global_batch=shape.global_batch
+                                          // max(accum, 1),
+                                          accum=accum, attn_impl=attn_impl)
+        p_sh, o_sh = trainer_lib.state_shapes(model, opt_cfg)
+        params = _abstract(p_sh, mesh, ts.in_specs[0])
+        opt = _abstract(o_sh, mesh, ts.in_specs[1])
+        bsh = train_batch_shapes(model, shape)
+        if accum > 1:
+            import jax as _jax
+            bsh = {k: _jax.ShapeDtypeStruct(
+                (accum, v.shape[0] // accum) + v.shape[1:]
+                if k != "positions" else
+                (accum, 3, v.shape[1] // accum) + v.shape[2:], v.dtype)
+                for k, v in bsh.items()}
+        batch = _abstract(bsh, mesh, ts.in_specs[2])
+        lowered = ts.fn.lower(params, opt, batch)
+        info["tokens_per_step"] = shape.global_batch * shape.seq_len
+        import jax as _j
+        info["donated_bytes"] = sum(
+            int(np.prod(x.shape)) * x.dtype.itemsize
+            for x in _j.tree.leaves((params, opt))) // world
+        if want_jaxpr:
+            info["jaxpr_analysis"] = _jaxpr_info(
+                ts.fn, (params, opt, batch), mesh)
+    elif shape.kind == "prefill":
+        batch_axes = tuple(a for a in axes if a != "model")
+        ps = serve_lib.build_prefill_step(model, mesh, batch_axes, ("model",))
+        pdt = serve_params_dtype or jnp.bfloat16
+        p_sh = {k: jax.ShapeDtypeStruct(s, pdt)
+                for k, s in model.param_shapes().items()}
+        params = _abstract(p_sh, mesh, ps.in_specs[0])
+        batch = _abstract(
+            serve_batch_shapes(model, shape.global_batch, shape.seq_len),
+            mesh, ps.in_specs[1])
+        lowered = ps.fn.lower(params, batch)
+        info["tokens_per_step"] = shape.global_batch * shape.seq_len
+        if want_jaxpr:
+            info["jaxpr_analysis"] = _jaxpr_info(ps.fn, (params, batch), mesh)
+    else:  # decode
+        batch_axes, kv_axes = serve_lib.serve_shape_policy(shape_name, axes)
+        ds = serve_lib.build_decode_step(model, mesh, batch_axes, kv_axes,
+                                         donate=True)
+        pdt = serve_params_dtype or jnp.bfloat16
+        p_sh = {k: jax.ShapeDtypeStruct(s, pdt)
+                for k, s in model.param_shapes().items()}
+        params = _abstract(p_sh, mesh, ds.in_specs[0])
+        caches = _abstract(
+            model.cache_shapes(shape.global_batch, shape.seq_len),
+            mesh, ds.in_specs[1])
+        batch = _abstract(serve_batch_shapes(model, shape.global_batch, 1),
+                          mesh, ds.in_specs[2])
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        lowered = ds.fn.lower(params, caches, batch, pos)
+        info["tokens_per_step"] = shape.global_batch
+        import jax as _j
+        info["donated_bytes"] = sum(
+            int(np.prod(x.shape)) * x.dtype.itemsize
+            for x in _j.tree.leaves(caches)) // world
+        if want_jaxpr:
+            info["jaxpr_analysis"] = _jaxpr_info(
+                ds.fn, (params, caches, batch, pos), mesh)
+    return lowered, info
+
+
+def analyze(lowered, info: Dict[str, Any], multi_pod: bool) -> Dict[str, Any]:
+    """Compile and extract memory / cost / collective / roofline terms."""
+    world = info["world"]
+    t0 = time.time()
+    compiled = lowered.compile()
+    info["compile_s"] = round(time.time() - t0, 1)
+
+    # ---- memory -----------------------------------------------------------
+    # two views: (a) XLA CPU buffer assignment — an upper bound inflated by
+    # the CPU backend's bf16->f32 legalization and concurrency-first
+    # scheduling; (b) jaxpr program-order liveness with TRUE dtypes — the
+    # TPU proxy that gates fits_16gb (see jaxpr_analysis.py).
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(ma, k, None)
+            if v is not None:
+                mem["xla_cpu_" + k] = int(v)
+        args = mem.get("xla_cpu_argument_size_in_bytes", 0)
+        alias = mem.get("xla_cpu_alias_size_in_bytes", 0)
+        mem["xla_cpu_peak_upper_bound"] = int(
+            args + mem.get("xla_cpu_output_size_in_bytes", 0)
+            + mem.get("xla_cpu_temp_size_in_bytes", 0) - alias)
+    except Exception as e:  # pragma: no cover
+        mem["error"] = repr(e)
+    ja = info.get("jaxpr_analysis")
+    if ja:
+        peak = int(ja["peak_bytes"])
+        # donation: in-place updated state (params+opt for train, KV caches
+        # for decode) is double-counted by the liveness walk (it cannot see
+        # input-output aliasing); subtract the donated bytes once
+        don = int(info.get("donated_bytes", 0))
+        mem["peak_bytes_undonated"] = peak
+        mem["donated_bytes"] = don
+        mem["peak_bytes_per_device"] = max(peak - don, 0)
+    else:
+        mem["peak_bytes_per_device"] = mem.get("xla_cpu_peak_upper_bound", 0)
+    mem["fits_16gb"] = bool(mem["peak_bytes_per_device"] <= HBM_BYTES)
+    info["memory"] = mem
+
+    # ---- cost ----------------------------------------------------------
+    # xla's cost_analysis visits each instruction once (while bodies are NOT
+    # multiplied by trip count), so we re-derive flops/bytes/collectives
+    # with the loop-aware walker; the raw xla numbers are kept for reference
+    cost = {}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        cost["xla_flops_unrolled_once"] = float(ca.get("flops", 0.0))
+    except Exception as e:  # pragma: no cover
+        cost["error"] = repr(e)
+
+    ja = info.get("jaxpr_analysis")
+    if ja:
+        cost["flops"] = ja["flops"]               # per-device, true dtypes
+        cost["bytes_accessed"] = ja["hbm_bytes"]
+        coll = ja["collectives"]
+    else:  # fallback: loop-aware HLO parse (bf16 counted as f32 on CPU)
+        from repro.launch.hlo_analysis import analyze_hlo
+        hlo = analyze_hlo(compiled.as_text(), world, multi_pod)
+        cost["flops"] = hlo["flops"]
+        cost["bytes_accessed"] = hlo["hbm_bytes"]
+        coll = hlo["collectives"]
+    info["cost"] = cost
+    info["collectives"] = coll
+    info.pop("jaxpr_analysis", None)  # folded into cost/collectives/memory
+
+    # ---- roofline --------------------------------------------------------
+    flops_dev = cost.get("flops", 0.0)
+    bytes_dev = cost.get("bytes_accessed", 0.0)
+    tier = coll["per_tier_wire"]
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    coll_ici = (tier["model"] + tier["data"]) / ICI_BW
+    coll_dci = tier["pod"] / DCI_BW
+    collective_s = coll_ici + coll_dci
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s, "collective_ici_s": coll_ici,
+             "collective_dci_s": coll_dci}
+    dominant = max(terms, key=lambda k: terms[k]
+                   if k in ("compute_s", "memory_s", "collective_s") else -1)
+    n_active = info["n_active"]
+    # train: fwd 2ND + bwd 4ND; prefill/decode: fwd only (2ND)
+    flops_per_tok = 6.0 if info.get("kind") == "train" else 2.0
+    model_flops = flops_per_tok * n_active * info["tokens_per_step"]
+    hlo_flops_global = flops_dev * world
+    info["roofline"] = {
+        **{k: float(v) for k, v in terms.items()},
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "hlo_flops_global": hlo_flops_global,
+        "useful_flops_ratio":
+            model_flops / hlo_flops_global if hlo_flops_global else 0.0,
+        "step_time_s": max(compute_s, memory_s, collective_s),
+        "mfu_bound": (model_flops / world / PEAK_FLOPS) /
+            max(compute_s, memory_s, collective_s, 1e-30),
+    }
+    return info
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def run_one(arch: str, shape: str, multi_pod: bool, variant: str,
+            out_dir: Optional[str], attn_impl: str = "xla",
+            accum: int = 0, tag: str = "",
+            serve_bits: int = 8) -> Dict[str, Any]:
+    t0 = time.time()
+    lowered, info = lower_cell(arch, shape, multi_pod, variant,
+                               attn_impl=attn_impl, accum=accum,
+                               serve_bits=serve_bits)
+    info.update({"arch": arch, "shape": shape, "attn_impl": attn_impl,
+                 "accum": accum, "tag": tag,
+                 "mesh": "2x16x16" if multi_pod else "16x16"})
+    if not info.get("skipped"):
+        info["lower_s"] = round(time.time() - t0, 1)
+        info = analyze(lowered, info, multi_pod)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        name = f"{arch}__{shape}__{info['mesh']}__{variant}"
+        if tag:
+            name += "__" + tag
+        with open(os.path.join(out_dir, name + ".json"), "w") as f:
+            json.dump(info, f, indent=1, default=str)
+    return info
+
+
+def run_matrix(archs, shapes, meshes, variant, out_dir, timeout=3600):
+    """Spawn one subprocess per cell (isolates compile memory; resumable —
+    cells with an existing JSON are skipped)."""
+    import subprocess
+    todo = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh in meshes:
+                tag = f"{arch}__{shape}__{mesh}__{variant}"
+                path = os.path.join(out_dir, tag + ".json")
+                if os.path.exists(path):
+                    print(f"SKIP (cached) {tag}")
+                    continue
+                todo.append((arch, shape, mesh, tag))
+    print(f"{len(todo)} cells to run")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    for i, (arch, shape, mesh, tag) in enumerate(todo):
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--variant", variant,
+               "--out", out_dir]
+        if mesh == "2x16x16":
+            cmd.append("--multi-pod")
+        t0 = time.time()
+        try:
+            r = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                               timeout=timeout)
+            status = "ok" if r.returncode == 0 else f"rc={r.returncode}"
+            if r.returncode != 0:
+                err = (r.stdout + r.stderr).strip().splitlines()
+                with open(os.path.join(out_dir, tag + ".FAILED"), "w") as f:
+                    f.write(r.stdout + r.stderr)
+                status += " :: " + (err[-1][:200] if err else "?")
+        except subprocess.TimeoutExpired:
+            status = "TIMEOUT"
+        print(f"[{i+1}/{len(todo)}] {tag}: {status} "
+              f"({time.time()-t0:.0f}s)", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--variant", default="zeropp",
+                    choices=["zeropp", "baseline", "qwz", "hpz", "qgz"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--all", action="store_true",
+                    help="run the full (arch x shape x mesh) matrix in "
+                         "per-cell subprocesses")
+    ap.add_argument("--meshes", default="16x16,2x16x16")
+    ap.add_argument("--timeout", type=int, default=3600)
+    ap.add_argument("--attn", default="xla", choices=["xla", "pallas"])
+    ap.add_argument("--accum", type=int, default=0)  # 0 = policy default
+    ap.add_argument("--serve-bits", type=int, default=8, choices=[4, 8])
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    if args.all:
+        from repro.configs import ASSIGNED, SHAPES
+        archs = [args.arch] if args.arch else ASSIGNED
+        shapes = [args.shape] if args.shape else list(SHAPES)
+        run_matrix(archs, shapes, args.meshes.split(","), args.variant,
+                   args.out, args.timeout)
+        return
+    assert args.arch and args.shape
+
+    info = run_one(args.arch, args.shape, args.multi_pod, args.variant,
+                   args.out, attn_impl=args.attn, accum=args.accum,
+                   tag=args.tag, serve_bits=args.serve_bits)
+    if info.get("skipped"):
+        print(f"SKIP {args.arch} {args.shape}: {info['why']}")
+        return
+    r = info["roofline"]
+    m = info["memory"]
+    print(f"CELL {args.arch} {args.shape} mesh={info['mesh']} "
+          f"variant={args.variant}")
+    print(f"  params={info['n_params']/1e9:.2f}B "
+          f"active={info['n_active']/1e9:.2f}B world={info['world']}")
+    print(f"  memory: peak/dev={m.get('peak_bytes_per_device', 0)/2**30:.2f}"
+          f" GiB fits16GB={m.get('fits_16gb')}")
+    print(f"  roofline: compute={r['compute_s']*1e3:.2f}ms "
+          f"memory={r['memory_s']*1e3:.2f}ms "
+          f"collective={r['collective_s']*1e3:.2f}ms "
+          f"(ici={r['collective_ici_s']*1e3:.2f} "
+          f"dci={r['collective_dci_s']*1e3:.2f}) -> {r['dominant']}")
+    print(f"  useful_flops_ratio={r['useful_flops_ratio']:.3f} "
+          f"mfu_bound={r['mfu_bound']:.3f} "
+          f"compile={info.get('compile_s')}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,455 @@
+"""Loop-aware analysis of compiled (post-optimization) HLO text.
+
+``compiled.cost_analysis()`` visits every instruction ONCE — it does not
+multiply while-loop bodies by their trip counts, which makes it useless for
+layer-scanned models (the entire per-layer compute/communication lives in a
+while body).  This module re-derives the three roofline inputs by walking
+the HLO computation graph with trip-count multiplication:
+
+  * flops       — 2·|out|·K for every dot, recursing through while/call/
+                  fusion/conditional, × trip count inside loops
+  * hbm_bytes   — Σ (operand + output bytes) per *materialized* instruction
+                  (fusion = one kernel: its operands/outputs are the HBM
+                  traffic; internals are free), × trip count
+  * collectives — per-op operand/wire bytes with ring-algorithm volume
+                  formulas, split by interconnect tier (model / data / pod),
+                  × trip count
+
+Trip counts are parsed from each loop condition's integer constants — our
+loops all come from lax.scan, whose conditions compare the induction
+variable against a literal.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_ASSIGN_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^{]*)?\{\s*$")
+
+
+def _split_instr(line: str):
+    """(name, type_str, opcode) or None.  Handles tuple types that contain
+    parens and /*index=N*/ comments (while/conditional results)."""
+    m = _ASSIGN_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = line[m.end():]
+    if rest.startswith("("):          # tuple type: consume balanced parens
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        type_str = rest[: i + 1]
+        tail = rest[i + 1:].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str = rest[:sp]
+        tail = rest[sp + 1:].lstrip()
+    p = tail.find("(")
+    if p <= 0:
+        return None
+    opcode = tail[:p].strip()
+    if not re.fullmatch(r"[\w\-]+", opcode):
+        return None
+    return name, type_str, opcode
+_GROUPS_V1_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+_FREE_OPS = {"parameter", "get-tuple-element", "tuple", "bitcast", "constant",
+             "after-all", "iota", "partition-id", "replica-id"}
+
+
+def _first_type_dims(tstr: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(tstr):
+        dims = [int(d) for d in m.group(2).split(",") if d]
+        out.append((m.group(1), dims))
+    return out
+
+
+def _type_bytes(tstr: str) -> int:
+    total = 0
+    for dt, dims in _first_type_dims(tstr):
+        if dt in _DTYPE_BYTES:
+            total += int(np.prod(dims)) * _DTYPE_BYTES[dt] if dims \
+                else _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    operands: List[str]
+    line: str
+
+
+def _parse_operands(line: str, opcode: str) -> List[str]:
+    i = line.find(opcode + "(")
+    if i < 0:
+        return []
+    call = line[i + len(opcode) + 1:]
+    depth, args = 1, []
+    buf = ""
+    for ch in call:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                args.append(buf)
+                break
+        if depth >= 1:
+            buf += ch
+    return re.findall(r"%([\w.\-]+)", "".join(args))
+
+
+def parse_module(text: str) -> Dict[str, List[Instr]]:
+    """Split HLO text into computations (name -> instruction list)."""
+    comps: Dict[str, List[Instr]] = {}
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m and ("(" in line or line.startswith("ENTRY")):
+                cur = m.group(1)
+                comps[cur] = []
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        got = _split_instr(line)
+        if got:
+            name, tstr, opcode = got
+            comps[cur].append(Instr(name, tstr, opcode,
+                                    _parse_operands(line, opcode), line))
+    return comps
+
+
+def _attr_comp(line: str, key: str) -> Optional[str]:
+    m = re.search(key + r"=%?([\w.\-]+)", line)
+    return m.group(1) if m else None
+
+
+def _trip_count(comps, cond_name: str) -> int:
+    """Max integer constant in the loop condition = scan trip count."""
+    best = 1
+    for ins in comps.get(cond_name, []):
+        if ins.opcode == "constant":
+            m = re.search(r"constant\((-?\d+)\)", ins.line)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _parse_groups(line: str) -> Optional[np.ndarray]:
+    m = _GROUPS_V1_RE.search(line)
+    if m:
+        groups = [[int(x) for x in g.split(",") if x]
+                  for g in re.findall(r"\{([^}]*)\}", m.group(1))]
+        width = max(len(g) for g in groups)
+        return np.array([g + [g[-1]] * (width - len(g)) for g in groups])
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        ng, gs = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        ids = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            perm = [int(x) for x in m.group(4).split(",")]
+            ids = ids.transpose(perm)
+        return ids.reshape(ng, gs)
+    return None
+
+
+def _group_tier(groups: Optional[np.ndarray], multi_pod: bool) -> str:
+    if groups is None:
+        return "data"
+    g = groups
+    if multi_pod and np.ptp(g // 256, axis=1).max() > 0:
+        return "pod"
+    if np.ptp((g % 256) // 16, axis=1).max() > 0:
+        return "data"
+    return "model"
+
+
+def _wire_bytes(op: str, in_bytes: int, out_bytes: int, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if op == "all-gather":
+        return max(out_bytes - in_bytes, 0)
+    if op == "reduce-scatter":
+        return max(in_bytes - out_bytes, 0)
+    if op == "all-reduce":
+        return 2.0 * in_bytes * (n - 1) / n
+    if op == "all-to-all":
+        return in_bytes * (n - 1) / n
+    if op == "collective-permute":
+        return float(in_bytes)
+    return float(in_bytes)
+
+
+def _dot_flops(ins: Instr, shapes: Dict[str, str]) -> float:
+    out_elems = 1
+    for dt, dims in _first_type_dims(ins.type_str):
+        out_elems = int(np.prod(dims)) if dims else 1
+        break
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
+    if not m or not ins.operands:
+        return 2.0 * out_elems  # dot with no contraction info
+    cdims = [int(x) for x in m.group(1).split(",") if x]
+    lhs_t = shapes.get(ins.operands[0])
+    if lhs_t is None:
+        return 2.0 * out_elems
+    for dt, dims in _first_type_dims(lhs_t):
+        k = 1
+        for c in cdims:
+            if c < len(dims):
+                k *= dims[c]
+        return 2.0 * out_elems * k
+    return 2.0 * out_elems
+
+
+@dataclasses.dataclass
+class Totals:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    transcendentals: float = 0.0
+    coll_per_op: Dict[str, Dict[str, float]] = dataclasses.field(
+        default_factory=dict)
+    coll_per_tier: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {"model": 0.0, "data": 0.0, "pod": 0.0})
+    coll_count: int = 0
+
+    def add_collective(self, base: str, in_b: float, wire: float, tier: str,
+                       mult: float):
+        d = self.coll_per_op.setdefault(
+            base, {"count": 0, "operand_bytes": 0.0, "wire_bytes": 0.0})
+        d["count"] += mult
+        d["operand_bytes"] += in_b * mult
+        d["wire_bytes"] += wire * mult
+        self.coll_per_tier[tier] += wire * mult
+        self.coll_count += int(mult)
+
+
+def _walk(comps, name: str, mult: float, t: Totals, multi_pod: bool,
+          world: int, memo: Dict[str, "Totals"], depth: int = 0):
+    """Accumulate totals for one computation, scaled by ``mult``."""
+    if depth > 50:
+        return
+    shapes = {i.name: i.type_str for i in comps.get(name, [])}
+    for ins in comps.get(name, []):
+        op = ins.opcode
+        if op == "while":
+            body = _attr_comp(ins.line, "body")
+            cond = _attr_comp(ins.line, "condition")
+            trips = _trip_count(comps, cond) if cond else 1
+            if body:
+                _walk(comps, body, mult * trips, t, multi_pod, world, memo,
+                      depth + 1)
+            continue
+        if op in ("call", "async-start"):
+            tgt = _attr_comp(ins.line, "to_apply") \
+                or _attr_comp(ins.line, "calls")
+            if tgt:
+                _walk(comps, tgt, mult, t, multi_pod, world, memo, depth + 1)
+            continue
+        if op == "conditional":
+            for tgt in re.findall(r"%([\w.\-]+)",
+                                  ins.line.split("branch_computations")[-1]
+                                  if "branch_computations" in ins.line
+                                  else ""):
+                _walk(comps, tgt, mult, t, multi_pod, world, memo, depth + 1)
+            continue
+
+        base = op.replace("-start", "")
+        if base in _COLL_OPS and not op.endswith("-done"):
+            in_b = sum(_type_bytes(shapes.get(o, "")) for o in ins.operands)
+            out_b = _type_bytes(ins.type_str)
+            groups = _parse_groups(ins.line)
+            n = groups.shape[1] if groups is not None else world
+            tier = _group_tier(groups, multi_pod)
+            wire = _wire_bytes(base, in_b, out_b, n)
+            t.add_collective(base, in_b, wire, tier, mult)
+            t.hbm_bytes += (in_b + out_b) * mult
+            continue
+
+        if op == "fusion":
+            tgt = _attr_comp(ins.line, "calls")
+            if tgt:
+                # dots may hide inside fusions: count their flops, but the
+                # fusion's HBM traffic is its own output (operands were
+                # counted when produced)
+                sub = memo.get(tgt)
+                if sub is None:
+                    sub = Totals()
+                    _walk(comps, tgt, 1.0, sub, multi_pod, world, {},
+                          depth + 1)
+                    sub.hbm_bytes = 0.0
+                    memo[tgt] = sub
+                t.flops += sub.flops * mult
+                t.transcendentals += sub.transcendentals * mult
+            t.hbm_bytes += _type_bytes(ins.type_str) * mult
+            continue
+
+        if op in ("dot", "convolution"):
+            t.flops += _dot_flops(ins, shapes) * mult
+            # dots re-read both operands from HBM (weights/activations) and
+            # write the product: count operands + output
+            t.hbm_bytes += (sum(_type_bytes(shapes.get(o, ""))
+                                for o in ins.operands)
+                            + _type_bytes(ins.type_str)) * mult
+            continue
+        if op in ("exponential", "tanh", "log", "rsqrt", "sqrt", "power",
+                  "sine", "cosine", "logistic"):
+            t.transcendentals += _type_bytes(ins.type_str) * mult
+
+        if op not in _FREE_OPS:
+            # non-dot materializations: count the write once; reads were
+            # someone else's write (fusion-blind traffic lower bound — see
+            # DESIGN.md §Roofline caveats)
+            t.hbm_bytes += _type_bytes(ins.type_str) * mult
+
+
+def analyze_hlo(text: str, world: int, multi_pod: bool) -> Dict:
+    """Loop-aware flops / bytes / collective totals for the entry module."""
+    comps = parse_module(text)
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_RE.match(line)
+            if m:
+                entry = m.group(1)
+                break
+    if entry is None:  # fall back: biggest computation
+        entry = max(comps, key=lambda k: len(comps[k]))
+    t = Totals()
+    _walk(comps, entry, 1.0, t, multi_pod, world, {})
+    return {
+        "flops": t.flops,
+        "hbm_bytes": t.hbm_bytes,
+        "transcendental_bytes": t.transcendentals,
+        "collectives": {
+            "per_op": t.coll_per_op,
+            "per_tier_wire": t.coll_per_tier,
+            "count": t.coll_count,
+            "operand_bytes": sum(d["operand_bytes"]
+                                 for d in t.coll_per_op.values()),
+            "wire_bytes": sum(d["wire_bytes"]
+                              for d in t.coll_per_op.values()),
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# liveness-aware peak memory estimate
+# ---------------------------------------------------------------------------
+
+_ALIAS_OPS = {"parameter", "get-tuple-element", "tuple", "bitcast",
+              "after-all", "constant", "iota", "partition-id", "replica-id"}
+
+
+def _comp_peak(comps, name: str, memo: Dict[str, float]) -> float:
+    """Peak live bytes of one computation under its textual (program-order)
+    schedule — a valid sequential schedule, hence an ACHIEVABLE peak.
+
+    The CPU backend's actual buffer assignment schedules for thread
+    concurrency and can hold many more buffers live simultaneously; a TPU
+    compiler schedules much closer to program order.  Aliasing ops are free;
+    while loops contribute state + max(body, cond) peak; fusions contribute
+    their output only (internals live in registers/VMEM).
+    """
+    if name in memo:
+        return memo[name]
+    memo[name] = 0.0  # cycle guard
+    instrs = comps.get(name, [])
+    sizes: Dict[str, float] = {}
+    alias_of: Dict[str, str] = {}
+
+    def root(n):  # follow alias chains to the owning buffer
+        seen = set()
+        while n in alias_of and n not in seen:
+            seen.add(n)
+            n = alias_of[n]
+        return n
+
+    # last textual use index per buffer root
+    last_use: Dict[str, int] = {}
+    for i, ins in enumerate(instrs):
+        for o in ins.operands:
+            last_use[o] = i
+    live: Dict[str, float] = {}
+    # parameters live from entry
+    for ins in instrs:
+        if ins.opcode == "parameter":
+            sizes[ins.name] = _type_bytes(ins.type_str)
+            live[ins.name] = sizes[ins.name]
+    peak = sum(live.values())
+
+    for i, ins in enumerate(instrs):
+        extra = 0.0
+        if ins.opcode in _ALIAS_OPS:
+            if ins.opcode in ("get-tuple-element", "bitcast") and ins.operands:
+                alias_of[ins.name] = ins.operands[0]
+            sizes.setdefault(ins.name, 0.0)
+        else:
+            out_b = float(_type_bytes(ins.type_str))
+            sizes[ins.name] = out_b
+            live[ins.name] = out_b
+            if ins.opcode == "while":
+                body = _attr_comp(ins.line, "body")
+                cond = _attr_comp(ins.line, "condition")
+                extra = max(_comp_peak(comps, body, memo) if body else 0.0,
+                            _comp_peak(comps, cond, memo) if cond else 0.0)
+            elif ins.opcode in ("call", "conditional"):
+                tgt = _attr_comp(ins.line, "to_apply")
+                if tgt:
+                    extra = _comp_peak(comps, tgt, memo)
+        peak = max(peak, sum(live.values()) + extra)
+        # free buffers whose last use has passed
+        for o in list(live):
+            if last_use.get(o, -1) <= i and o != ins.name:
+                # keep if some alias of it is used later
+                still = any(last_use.get(a, -1) > i
+                            for a, r in alias_of.items() if root(r) == o)
+                if not still:
+                    del live[o]
+    memo[name] = peak
+    return peak
+
+
+def estimate_peak_bytes(text: str) -> float:
+    """Liveness-based peak for the entry computation (program order)."""
+    comps = parse_module(text)
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_RE.match(line)
+            if m:
+                entry = m.group(1)
+                break
+    if entry is None:
+        entry = max(comps, key=lambda k: len(comps[k]))
+    return _comp_peak(comps, entry, {})

@@ -1,0 +1,327 @@
+"""Roofline inputs derived from the JAXPR (not the compiled HLO).
+
+The CPU backend legalizes bf16 arithmetic AND collectives to f32, so the
+compiled HLO systematically doubles every bf16 byte count (wire and HBM) —
+useless for a TPU roofline.  The jaxpr has the TRUE dtypes, the REAL mesh
+axis names on every collective, and explicit scan trip counts, so the
+traversal here is exact where the HLO parse was heuristic:
+
+  * flops        — dot_general from dimension_numbers × scan lengths
+  * hbm_bytes    — eqn outputs (+ dot/collective operands) × scan lengths:
+                   a fusion-blind traffic model (upper-bound-ish; see
+                   DESIGN.md §Roofline caveats)
+  * collectives  — wire bytes per op with ring formulas, per mesh-axis tier
+  * peak_bytes   — program-order liveness over the jaxpr with true dtypes
+                   (the TPU memory proxy; the CPU XLA temp number is kept
+                   alongside as a scheduler-inflated upper bound)
+
+All sub-jaxprs (pjit, scan, custom_vjp, remat, shard_map, cond) are walked
+recursively.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+_COLL = {"all_gather", "psum", "reduce_scatter", "psum_scatter",
+         "all_to_all", "ppermute"}
+_TIER_RANK = {"model": 0, "data": 1, "pod": 2}
+# ops that necessarily materialize their result on TPU (everything
+# elementwise/layout is fusable and counted as free)
+_MATERIALIZING = {"gather", "scatter", "scatter-add", "scatter_add",
+                  "dynamic_update_slice", "dynamic_slice", "sort", "argsort",
+                  "top_k", "cumsum", "cumlogsumexp", "concatenate", "pad"}
+
+
+def _aval_bytes(aval) -> float:
+    try:
+        return float(np.prod(aval.shape) * aval.dtype.itemsize) \
+            if aval.shape else float(aval.dtype.itemsize)
+    except Exception:
+        return 0.0
+
+
+def _axes_of(params) -> Tuple[str, ...]:
+    ax = params.get("axis_name", params.get("axis_index_groups_axis", ()))
+    if ax is None:
+        return ()
+    if isinstance(ax, (tuple, list)):
+        return tuple(str(a) for a in ax)
+    return (str(ax),)
+
+
+def _tier(axes: Tuple[str, ...]) -> str:
+    best = "model"
+    for a in axes:
+        if _TIER_RANK.get(a, 0) > _TIER_RANK[best]:
+            best = a if a in _TIER_RANK else best
+    return best
+
+
+def _wire(prim: str, in_b: float, out_b: float, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if prim == "all_gather":
+        return max(out_b - in_b, 0.0)
+    if prim in ("reduce_scatter", "psum_scatter"):
+        return max(in_b - out_b, 0.0)
+    if prim == "psum":
+        return 2.0 * in_b * (n - 1) / n
+    if prim == "all_to_all":
+        return in_b * (n - 1) / n
+    if prim == "ppermute":
+        return in_b
+    return in_b
+
+
+def _sub_jaxprs(eqn) -> List[Tuple[Any, float]]:
+    """(sub_jaxpr, trip_multiplier) pairs reachable from an eqn."""
+    p = eqn.params
+    prim = eqn.primitive.name
+    out = []
+    if prim == "scan":
+        out.append((p["jaxpr"].jaxpr, float(p["length"])))
+    elif prim == "while":
+        # our loops are scans; a raw while gets trip=1 (documented)
+        out.append((p["body_jaxpr"].jaxpr, 1.0))
+    elif prim == "cond":
+        for br in p["branches"]:
+            out.append((br.jaxpr, 1.0))
+    else:
+        for key in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
+            if key in p:
+                j = p[key]
+                out.append((getattr(j, "jaxpr", j), 1.0))
+    return out
+
+
+@dataclasses.dataclass
+class JTotals:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_per_op: Dict[str, Dict[str, float]] = dataclasses.field(
+        default_factory=dict)
+    coll_per_tier: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {"model": 0.0, "data": 0.0, "pod": 0.0})
+    coll_count: float = 0.0
+
+
+def _dot_flops(eqn) -> float:
+    (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+    lhs = eqn.invars[0].aval
+    k = 1.0
+    for d in lc:
+        k *= lhs.shape[d]
+    out_elems = float(np.prod(eqn.outvars[0].aval.shape)) \
+        if eqn.outvars[0].aval.shape else 1.0
+    return 2.0 * out_elems * k
+
+
+def _walk(jaxpr, mult: float, t: JTotals, mesh_shape: Dict[str, int],
+          depth: int = 0):
+    if depth > 64:
+        return
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim == "pallas_call":
+            # one kernel: HBM traffic is its operands + results; flops come
+            # from the kernel body x grid size
+            out_b = sum(_aval_bytes(v.aval) for v in eqn.outvars)
+            in_b = sum(_aval_bytes(v.aval) for v in eqn.invars
+                       if hasattr(v, "aval"))
+            t.hbm_bytes += (in_b + out_b) * mult
+            body = eqn.params.get("jaxpr")
+            grid = 1.0
+            gm = eqn.params.get("grid_mapping")
+            if gm is not None:
+                for g in getattr(gm, "grid", ()) or ():
+                    if isinstance(g, int):
+                        grid *= g
+            if body is not None:
+                tt = JTotals()
+                _walk(getattr(body, "jaxpr", body), mult * grid, tt,
+                      mesh_shape, depth + 1)
+                t.flops += tt.flops
+            continue
+        subs = _sub_jaxprs(eqn)
+        if prim == "cond" and subs:
+            # count the most expensive branch
+            best = None
+            for sub, m in subs:
+                tt = JTotals()
+                _walk(sub, mult * m, tt, mesh_shape, depth + 1)
+                if best is None or tt.flops > best.flops:
+                    best = tt
+            t.flops += best.flops
+            t.hbm_bytes += best.hbm_bytes
+            for k, v in best.coll_per_tier.items():
+                t.coll_per_tier[k] += v
+            for k, d in best.coll_per_op.items():
+                dd = t.coll_per_op.setdefault(
+                    k, {"count": 0.0, "operand_bytes": 0.0, "wire_bytes": 0.0})
+                for f in dd:
+                    dd[f] += d[f]
+            t.coll_count += best.coll_count
+            continue
+        if subs:
+            for sub, m in subs:
+                _walk(sub, mult * m, t, mesh_shape, depth + 1)
+            # scan boundary traffic: stacked xs read once, stacked
+            # ys/carry written once (per outer execution)
+            if prim == "scan":
+                state = sum(_aval_bytes(v.aval) for v in eqn.outvars)
+                state += sum(_aval_bytes(v.aval) for v in eqn.invars
+                             if hasattr(v, "aval"))
+                t.hbm_bytes += state * mult
+            continue
+
+        out_b = sum(_aval_bytes(v.aval) for v in eqn.outvars)
+        in_b = sum(_aval_bytes(v.aval) for v in eqn.invars
+                   if hasattr(v, "aval"))
+
+        if prim in _COLL:
+            axes = _axes_of(eqn.params)
+            n = 1
+            for a in axes:
+                n *= mesh_shape.get(a, 1)
+            wire = _wire(prim, in_b, out_b, n)
+            tier = _tier(axes)
+            d = t.coll_per_op.setdefault(
+                prim, {"count": 0.0, "operand_bytes": 0.0, "wire_bytes": 0.0})
+            d["count"] += mult
+            d["operand_bytes"] += in_b * mult
+            d["wire_bytes"] += wire * mult
+            t.coll_per_tier[tier] += wire * mult
+            t.coll_count += mult
+            t.hbm_bytes += (in_b + out_b) * mult
+            continue
+
+        if prim == "dot_general":
+            t.flops += _dot_flops(eqn) * mult
+            t.hbm_bytes += (in_b + out_b) * mult
+            continue
+
+        if prim in _MATERIALIZING:
+            t.hbm_bytes += (out_b * 2 + (in_b if prim.startswith("scatter")
+                                         or prim == "dynamic_update_slice"
+                                         else 0)) * mult
+        # everything else: elementwise/layout ops are assumed fused into
+        # their producing/consuming kernels (TPU-optimistic floor; the CPU
+        # XLA number in memory.xla_cpu_* is the unfused upper bound)
+
+
+# layout ops whose outputs alias their input buffer (no new allocation on
+# TPU: reshapes are bitcasts; transposes/converts fold into consuming dots)
+_ALIAS_PRIMS = {"reshape", "squeeze", "expand_dims", "broadcast_in_dim",
+                "transpose", "bitcast_convert_type", "stop_gradient",
+                "optimization_barrier"}
+
+
+def _peak(jaxpr, depth: int = 0) -> float:
+    """Program-order liveness peak (true dtypes).
+
+    Alias-aware: layout ops keep their INPUT alive instead of allocating;
+    sub-jaxpr peaks exclude their parameters (already live at the caller).
+    """
+    if depth > 64:
+        return 0.0
+
+    def is_var(v):
+        return type(v).__name__ != "Literal"
+
+    alias_of: Dict[Any, Any] = {}
+
+    def root(v):
+        seen = set()
+        while v in alias_of and id(v) not in seen:
+            seen.add(id(v))
+            v = alias_of[v]
+        return v
+
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name in _ALIAS_PRIMS and len(eqn.invars) == 1 \
+                and is_var(eqn.invars[0]) \
+                and _aval_bytes(eqn.outvars[0].aval) \
+                <= _aval_bytes(eqn.invars[0].aval):
+            alias_of[eqn.outvars[0]] = eqn.invars[0]
+
+    last_use: Dict[Any, int] = {}
+    for i, eqn in enumerate(jaxpr.eqns):
+        for v in eqn.invars:
+            if is_var(v):
+                last_use[root(v)] = i
+    for v in jaxpr.outvars:
+        if is_var(v):
+            last_use[root(v)] = len(jaxpr.eqns) + 1
+
+    live: Dict[Any, float] = {}
+    for v in jaxpr.invars + jaxpr.constvars:
+        live[v] = _aval_bytes(v.aval)
+    peak = sum(live.values())
+    for i, eqn in enumerate(jaxpr.eqns):
+        for v in eqn.outvars:
+            if v not in alias_of:
+                live[v] = _aval_bytes(v.aval)
+        inner = 0.0
+        for sub, m in _sub_jaxprs(eqn):
+            # exclude sub params: those buffers are the eqn operands,
+            # already counted in the caller's live set
+            param_b = sum(_aval_bytes(v.aval)
+                          for v in sub.invars + sub.constvars)
+            inner = max(inner, _peak(sub, depth + 1) - param_b)
+        peak = max(peak, sum(live.values()) + inner)
+        for v in list(live):
+            if last_use.get(v, -1) <= i:
+                ok = any(root(ov) is v for ov in eqn.outvars)
+                if not ok:
+                    del live[v]
+    return peak
+
+
+def analyze_jaxpr(closed_jaxpr, mesh_shape: Dict[str, int]) -> Dict[str, Any]:
+    jx = closed_jaxpr.jaxpr
+    t = JTotals()
+    _walk(jx, 1.0, t, mesh_shape)
+    world = 1
+    for n in mesh_shape.values():
+        world *= n
+    # per-device: the jaxpr is the shard_map body-level program after jit;
+    # avals inside shard_map are per-device.  dot/bytes sums above already
+    # reflect per-device work.
+    return {
+        "flops": t.flops,
+        "hbm_bytes": t.hbm_bytes,
+        "collectives": {
+            "per_op": t.coll_per_op,
+            "per_tier_wire": t.coll_per_tier,
+            "count": t.coll_count,
+            "operand_bytes": sum(d["operand_bytes"]
+                                 for d in t.coll_per_op.values()),
+            "wire_bytes": sum(d["wire_bytes"]
+                              for d in t.coll_per_op.values()),
+        },
+        "peak_bytes": _peak(jx),
+    }
+
+
+def shard_map_body(closed_jaxpr):
+    """Find the (first) shard_map body jaxpr — per-device avals.
+
+    The peak-liveness walk must run on per-device shapes; the jit wrapper
+    levels above carry GLOBAL arrays.
+    """
+    jx = closed_jaxpr.jaxpr if hasattr(closed_jaxpr, "jaxpr") else closed_jaxpr
+    stack = [jx]
+    seen = 0
+    while stack and seen < 10000:
+        cur = stack.pop(0)
+        for eqn in cur.eqns:
+            seen += 1
+            if eqn.primitive.name in ("shard_map", "smap"):
+                sub = eqn.params.get("jaxpr")
+                return getattr(sub, "jaxpr", sub)
+            for sub, _ in _sub_jaxprs(eqn):
+                stack.append(sub)
+    return jx

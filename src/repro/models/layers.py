@@ -1,0 +1,115 @@
+"""Shared neural building blocks (pure functions on explicit weights)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def swiglu(x: Array, w_gate_up: Array, w_down: Array,
+           act: str = "silu") -> Array:
+    """Gated MLP.  ``w_gate_up``: (d, 2*ff) fused gate|up; ``w_down``: (ff, d)."""
+    gu = x @ w_gate_up
+    g, u = jnp.split(gu, 2, axis=-1)
+    if act == "silu":
+        a = jax.nn.silu(g)
+    elif act == "gelu":
+        a = jax.nn.gelu(g, approximate=True)
+    else:
+        raise ValueError(act)
+    return (a * u) @ w_down
+
+
+def rope_table(positions: Array, head_dim: int, theta: float) -> Tuple[Array, Array]:
+    """(cos, sin) tables for rotary embedding.  positions: (..., S) int32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: Array, cos: Array, sin: Array) -> Array:
+    """Rotate pairs (x1, x2) -> (x1 cos - x2 sin, x1 sin + x2 cos).
+
+    x: (B, S, H, hd); cos/sin: (B, S, half) or (S, half).
+    """
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mrope_tables(positions_thw: Array, head_dim: int, theta: float,
+                 sections: Tuple[float, float, float] = (0.25, 0.375, 0.375)
+                 ) -> Tuple[Array, Array]:
+    """M-RoPE (Qwen2-VL §3.1): the rotary half-dim is split into three
+    sections driven by temporal / height / width position streams.
+
+    positions_thw: (3, B, S) int32.  Returns (cos, sin): (B, S, half).
+    """
+    half = head_dim // 2
+    s_t = int(half * sections[0])
+    s_h = int(half * sections[1])
+    s_w = half - s_t - s_h
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    pos = positions_thw.astype(jnp.float32)  # (3, B, S)
+    sec_of = jnp.concatenate([
+        jnp.zeros((s_t,), jnp.int32),
+        jnp.ones((s_h,), jnp.int32),
+        jnp.full((s_w,), 2, jnp.int32),
+    ])
+    # pick the position stream per frequency index
+    p = jnp.moveaxis(pos, 0, -1)[:, :, sec_of]        # (B, S, half)
+    ang = p * freqs[None, None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def causal_conv1d(x: Array, w: Array, carry: Optional[Array] = None
+                  ) -> Tuple[Array, Array]:
+    """Depthwise causal temporal convolution (Mamba / Griffin stem).
+
+    x: (B, S, C); w: (W, C) depthwise taps.  ``carry``: (B, W-1, C) history
+    from the previous sequence shard / decode step (zeros if None).
+    Returns (y, new_carry) where new_carry is the last W-1 inputs.
+    """
+    W = w.shape[0]
+    B, S, C = x.shape
+    if carry is None:
+        carry = jnp.zeros((B, W - 1, C), x.dtype)
+    xp = jnp.concatenate([carry, x], axis=1)  # (B, S+W-1, C)
+    y = jnp.zeros_like(x)
+    for i in range(W):  # W is tiny (4); unrolled taps fuse well
+        y = y + xp[:, i:i + S, :] * w[i][None, None, :]
+    new_carry = xp[:, S:, :] if W > 1 else jnp.zeros((B, 0, C), x.dtype)
+    return y, new_carry
+
+
+def softmax_xent(logits: Array, targets: Array, mask: Optional[Array] = None
+                 ) -> Tuple[Array, Array]:
+    """Token NLL sum (fp32) and count.  logits (..., V); targets (...)."""
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), targets[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        nll = nll * mask
+        cnt = jnp.sum(mask)
+    else:
+        cnt = jnp.asarray(nll.size, jnp.float32)
+    return jnp.sum(nll), cnt

@@ -1,0 +1,581 @@
+"""Model driver: parameter groups, init, loss / prefill / decode.
+
+``Model`` owns the flat ZeRO parameter groups and drives the pattern scan
+over blocks through the ZeRO++ engine.  It is mode- and mesh-agnostic:
+the trainer/server wraps its methods in shard_map; smoke tests call them
+directly with ``ZeroConfig.local()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.core.partition import ParamSpec
+from repro.core.zeropp import ZeroConfig, zero_apply, zero_apply_inference
+from repro.models import attention as attn_lib
+from repro.models import layers as nn
+from repro.models import moe as moe_lib
+from repro.models.transformer import (RunSpec, apply_block, block_entries,
+                                      expert_entries, init_cache_shapes,
+                                      moe_pre_block, _sub)
+
+Array = jax.Array
+
+
+def _inv_softplus(y):
+    return float(np.log(np.expm1(y)))
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig, zcfg: ZeroConfig, world: int = 1):
+        self.cfg = cfg
+        self.zcfg = zcfg
+        self.world = world
+        period = cfg.pattern
+        self.period = period
+        self.n_periods = cfg.n_layers // len(period)
+        self.rem = cfg.n_layers % len(period)
+        align = zcfg.align(world) if zcfg.distributed else zcfg.align(1)
+
+        self.is_moe = "moe" in period
+        if self.is_moe:
+            # assigned MoE archs are pure-MoE stacks; the chunked expert
+            # path assumes one MoE layer per scan step
+            assert period == ("moe",), "moe must be the whole pattern"
+            self.expert_spec = ParamSpec(tuple(expert_entries(cfg)),
+                                         align=align)
+        else:
+            self.expert_spec = None
+
+        pe: List = []
+        for i, kind in enumerate(period):
+            pe += block_entries(cfg, kind, f"{i}.")
+        self.period_spec = ParamSpec(tuple(pe), align=align)
+        if self.rem:
+            re_ = []
+            for i, kind in enumerate(period[: self.rem]):
+                re_ += block_entries(cfg, kind, f"{i}.")
+            self.rem_spec = ParamSpec(tuple(re_), align=align)
+        else:
+            self.rem_spec = None
+        if not cfg.embed_inputs:
+            self.embed_spec = ParamSpec((("emb", (cfg.vocab, cfg.d_model)),),
+                                        align=align)
+        else:
+            self.embed_spec = None
+        self.head_spec = ParamSpec((("fnorm", (cfg.d_model,)),), align=align)
+        # unembedding: TRANSPOSED (V, d), split into vocab-row chunks that
+        # are gathered one at a time (streaming log-sum-exp across chunks)
+        nv = cfg.unemb_chunks or self._auto_unemb_chunks()
+        assert cfg.vocab % nv == 0, (cfg.vocab, nv)
+        self.unemb_chunks = nv
+        self.vchunk = cfg.vocab // nv
+        self.unemb_spec = ParamSpec(
+            (("unemb", (self.vchunk, cfg.d_model)),), align=align)
+
+        self.n_moe_layers = sum(1 for k in period for _ in [0] if k == "moe") \
+            * self.n_periods + sum(1 for k in period[: self.rem] if k == "moe")
+
+    def _auto_unemb_chunks(self, target_bytes: int = 512 * 2 ** 20) -> int:
+        cfg = self.cfg
+        total = cfg.vocab * cfg.d_model * 2  # bf16 gathered
+        want = max(1, -(-total // target_bytes))
+        # floor of 4 for big vocabularies: the streaming-LSE logits tile is
+        # (T, V/nv) fp32, so nv also bounds the logits working set
+        if cfg.vocab >= 32768:
+            want = max(want, 4)
+        nv = want
+        while cfg.vocab % nv:
+            nv += 1
+        return nv
+
+    # ------------------------------------------------------------------ init
+
+    def param_shapes(self) -> Dict[str, Tuple[int, ...]]:
+        """GLOBAL flat buffer shapes (dry-run uses these directly)."""
+        out: Dict[str, Tuple[int, ...]] = {}
+        if self.embed_spec:
+            out["embed"] = (self.embed_spec.padded_size,)
+        out["blocks"] = (self.n_periods, self.period_spec.padded_size)
+        if self.is_moe:
+            out["experts"] = (self.n_periods, self.cfg.expert_chunks,
+                              self.expert_spec.padded_size)
+        if self.rem_spec:
+            out["rem"] = (self.rem_spec.padded_size,)
+        out["head"] = (self.head_spec.padded_size,)
+        out["unemb"] = (self.unemb_chunks, self.unemb_spec.padded_size)
+        return out
+
+    def n_params(self) -> int:
+        n = self.period_spec.size * self.n_periods + self.head_spec.size
+        n += self.unemb_spec.size * self.unemb_chunks
+        if self.is_moe:
+            n += self.expert_spec.size * self.cfg.expert_chunks \
+                * self.n_periods
+        if self.rem_spec:
+            n += self.rem_spec.size
+        if self.embed_spec:
+            n += self.embed_spec.size
+        return n
+
+    def n_active_params(self) -> int:
+        """Parameters touched per token (MoE: shared + top_k experts)."""
+        cfg = self.cfg
+        if not cfg.n_experts:
+            return self.n_params()
+        per_expert = 3 * cfg.d_model * cfg.moe_ff
+        inactive = (cfg.n_experts - cfg.top_k) * per_expert
+        return self.n_params() - inactive * cfg.n_layers
+
+    def _init_fn(self, name: str):
+        cfg = self.cfg
+        base = name.split(".")[-1]
+        rng_scaled = lambda std: (lambda k, s: jax.random.normal(k, s) * std)
+        if base == "emb":
+            return rng_scaled(0.02)
+        if base == "unemb":  # stored (V_chunk, d): scale by 1/sqrt(d)
+            return lambda k, s: jax.random.normal(k, s) / np.sqrt(s[-1])
+        if base in ("wq", "wk", "wv", "wgu", "router", "px", "pg", "wa",
+                    "wx", "inp"):
+            return lambda k, s: jax.random.normal(k, s) / np.sqrt(s[0])
+        if base in ("wo", "wdn", "po", "outp", "sdn"):
+            return lambda k, s: jax.random.normal(k, s) / np.sqrt(s[0])
+        if base in ("egu", "sgu"):
+            return lambda k, s: jax.random.normal(k, s) / np.sqrt(s[-2])
+        if base == "edn":
+            return lambda k, s: jax.random.normal(k, s) / np.sqrt(s[-2])
+        if base == "cw":
+            return lambda k, s: jax.random.normal(k, s) / np.sqrt(s[0])
+        if base == "alog":
+            return lambda k, s: jnp.log(jax.random.uniform(k, s, minval=1.0,
+                                                           maxval=16.0))
+        if base == "dskip":
+            return lambda k, s: jnp.ones(s)
+        if base == "dtb":
+            lo, hi = _inv_softplus(1e-3), _inv_softplus(0.1)
+            return lambda k, s: jax.random.uniform(k, s, minval=lo, maxval=hi)
+        if base == "loga":
+            return lambda k, s: jax.random.uniform(k, s, minval=-0.8,
+                                                   maxval=-0.01)
+        return None  # zeros: norms, biases
+
+    def init_params(self, key: Array, dtype=None) -> Dict[str, Array]:
+        """GLOBAL flat buffers (small models / examples; dry-run never calls)."""
+        dtype = dtype or self.zcfg.param_dtype
+        out: Dict[str, Array] = {}
+        ks = jax.random.split(key, 4 + 2 * self.n_periods)
+        if self.embed_spec:
+            fns = {n: self._init_fn(n) for n, _ in self.embed_spec.entries}
+            out["embed"] = self.embed_spec.init(ks[0], fns, jnp.float32).astype(dtype)
+        bufs = []
+        fns = {n: self._init_fn(n) for n, _ in self.period_spec.entries}
+        for g in range(self.n_periods):
+            bufs.append(self.period_spec.init(ks[2 + g], fns, jnp.float32))
+        out["blocks"] = jnp.stack(bufs).astype(dtype)
+        if self.is_moe:
+            efns = {n: self._init_fn(n) for n, _ in self.expert_spec.entries}
+            ebufs = []
+            for g in range(self.n_periods):
+                kc = jax.random.split(ks[2 + self.n_periods + g],
+                                      self.cfg.expert_chunks)
+                ebufs.append(jnp.stack([
+                    self.expert_spec.init(kc[c], efns, jnp.float32)
+                    for c in range(self.cfg.expert_chunks)]))
+            out["experts"] = jnp.stack(ebufs).astype(dtype)
+        if self.rem_spec:
+            fns = {n: self._init_fn(n) for n, _ in self.rem_spec.entries}
+            out["rem"] = self.rem_spec.init(ks[1], fns, jnp.float32).astype(dtype)
+        fns = {n: self._init_fn(n) for n, _ in self.head_spec.entries}
+        out["head"] = self.head_spec.init(ks[-1], fns, jnp.float32).astype(dtype)
+        ufns = {n: self._init_fn(n) for n, _ in self.unemb_spec.entries}
+        kv = jax.random.split(ks[-2], self.unemb_chunks)
+        out["unemb"] = jnp.stack([
+            self.unemb_spec.init(kv[c], ufns, jnp.float32)
+            for c in range(self.unemb_chunks)]).astype(dtype)
+        return out
+
+    # ------------------------------------------------------------- positions
+
+    def _rope_tables(self, batch: Dict[str, Array], rs: RunSpec,
+                     s_local: int, cache_pos: Optional[Array] = None):
+        cfg = self.cfg
+        if cfg.mrope:
+            pos = batch["positions"]  # (3, B, S_loc) from the frontend stub
+            cos, sin = nn.mrope_tables(pos, cfg.d_head, cfg.rope_theta)
+        else:
+            if rs.mode == "decode":
+                p = cache_pos[None]
+            else:
+                p = attn_lib.seq_shard_offset(s_local, rs.seq_axes) \
+                    + jnp.arange(s_local)
+            cos, sin = nn.rope_table(p, cfg.d_head, cfg.rope_theta)
+        return lax.stop_gradient(cos), lax.stop_gradient(sin)
+
+    # ----------------------------------------------------------- moe layer
+
+    def _moe_layer(self, zw, rs: RunSpec, pflat, eflat, h, cos, sin,
+                   cache_pos, cache):
+        """One MoE layer with chunked expert gathers.
+
+        ``zw`` wraps a function into the ZeRO++ engine (zero_apply for
+        training, zero_apply_inference for serving).  Structure:
+
+          pre   (1 gather):  attn + ln2 + router logits + shared experts
+          dispatch (pure):   sort-based token->slot routing, indices only
+          chunks (nc gathers): each chunk rebuilds its slot buffer from the
+                             token activations and runs the grouped GEMMs
+          combine (pure):    gated scatter back to tokens
+
+        Keeping only (h, hn2, indices) as inter-gather values bounds the
+        per-layer activation residual to O(T·d), not O(T·k·capacity·d).
+        Returns (h_out, new_cache, aux_loss).
+        """
+        cfg, z = self.cfg, self.zcfg
+        spec = self.period_spec
+        B, S = h.shape[0], h.shape[1]
+        d = cfg.d_model
+        nc = cfg.expert_chunks
+        Ec = cfg.n_experts // nc
+
+        def pre_f(W, h, cos, sin, cache_pos, cache):
+            p = _sub(spec.unpack(W.astype(z.compute_dtype)), "0.")
+            posd = {"rope": (cos, sin), "cache_pos": cache_pos}
+            return moe_pre_block(cfg, p, h, rs, posd, cache)
+
+        h2, hn2, logits, shared_y, new_cache = zw(pre_f)(
+            pflat, h, cos, sin, cache_pos, cache)
+
+        capacity = None
+        if rs.mode != "train":  # serving must be drop-free (decode==prefill)
+            capacity = moe_lib.serve_capacity(
+                hn2.shape[0], cfg.top_k, cfg.n_experts)
+        disp = moe_lib.moe_dispatch(
+            hn2, logits, top_k=cfg.top_k,
+            capacity_factor=cfg.capacity_factor, capacity=capacity)
+        chunk_slots = Ec * disp.cap
+
+        def chunk_f(Wc, hn2, dest, src_tok, g_sorted, c):
+            pc = self.expert_spec.unpack(Wc.astype(z.compute_dtype))
+            buf = moe_lib.build_chunk_buf(hn2, dest, src_tok,
+                                          c * chunk_slots, chunk_slots)
+            out = moe_lib.expert_ffn(buf.reshape(Ec, disp.cap, d),
+                                     pc["egu"], pc["edn"])
+            # gate multiply INSIDE the chunk: router grads come from the
+            # chunk's own recompute, and the outer combine stays index-only
+            g = moe_lib.build_chunk_gates(g_sorted, dest, c * chunk_slots,
+                                          chunk_slots)
+            return out * g.reshape(Ec, disp.cap, 1).astype(out.dtype)
+
+        apc = zw(chunk_f)
+
+        def cbody(carry, xs):
+            ef, c = xs
+            return carry, apc(ef, hn2, disp.dest, disp.src_tok,
+                              disp.g_sorted, c)
+
+        _, outs = lax.scan(cbody, (), (eflat, jnp.arange(nc, dtype=jnp.int32)))
+        y = moe_lib.moe_combine(outs.reshape(cfg.n_experts, disp.cap, d),
+                                disp)
+        h3 = h2 + shared_y + y.reshape(B, S, d).astype(h2.dtype)
+        return h3, new_cache, disp.aux_loss
+
+    # ------------------------------------------------------------------ train
+
+    def loss_fn(self, params: Dict[str, Array], batch: Dict[str, Array],
+                rs: RunSpec, dp_world: int) -> Tuple[Array, Dict[str, Array]]:
+        """Local loss (sum-NLL / global token count).  psum-able."""
+        cfg, z = self.cfg, self.zcfg
+        if cfg.embed_inputs:
+            h = batch["embeds"].astype(z.compute_dtype)
+        else:
+            toks = batch["tokens"]
+            emb_f = lambda W, t: self.embed_spec.unpack(W)["emb"][t] \
+                .astype(z.compute_dtype)
+            h = zero_apply(emb_f, z)(params["embed"], toks)
+        B, S_loc = h.shape[0], h.shape[1]
+        cos, sin = self._rope_tables(batch, rs, S_loc)
+        global_tokens = float(B * S_loc * dp_world)
+
+        def period_fn(W, h, cos, sin, spec=self.period_spec, kinds=self.period):
+            p = spec.unpack(W.astype(z.compute_dtype))
+            aux = jnp.float32(0)
+            for i, kind in enumerate(kinds):
+                h, _, a = apply_block(cfg, kind, _sub(p, f"{i}."), h, rs,
+                                      {"rope": (cos, sin)}, None)
+                aux = aux + a
+            return h, aux
+
+        if self.is_moe:
+            zw = lambda f: zero_apply(f, z)
+
+            def body(h, xs):
+                pflat, eflat = xs
+                h2, _, aux = self._moe_layer(zw, rs, pflat, eflat, h,
+                                             cos, sin, None, None)
+                return h2, aux
+
+            h, auxs = lax.scan(body, h,
+                               (params["blocks"], params["experts"]))
+        else:
+            ap = zero_apply(period_fn, z)
+
+            def body(h, pflat):
+                h2, aux = ap(pflat, h, cos, sin)
+                return h2, aux
+
+            h, auxs = lax.scan(body, h, params["blocks"])
+        aux = jnp.sum(auxs)
+        if self.rem_spec:
+            ap_rem = zero_apply(
+                partial(period_fn, spec=self.rem_spec,
+                        kinds=self.period[: self.rem]), z)
+            h, aux_r = ap_rem(params["rem"], h, cos, sin)
+            aux = aux + aux_r
+
+        def norm_fn(W, h):
+            p = self.head_spec.unpack(W.astype(z.compute_dtype))
+            return nn.rms_norm(h, p["fnorm"])
+
+        hn = zero_apply(norm_fn, z)(params["head"], h)
+        nll_sum = self._streaming_xent(
+            lambda f: zero_apply(f, z), params["unemb"],
+            hn.reshape(-1, cfg.d_model), batch["targets"].reshape(-1))
+        loss = nll_sum / global_tokens
+        metrics = {"nll_sum": nll_sum, "tokens": jnp.float32(B * S_loc)}
+        if self.n_moe_layers:
+            aux_mean = aux / (self.n_moe_layers * dp_world)
+            loss = loss + cfg.aux_loss_weight * aux_mean
+            metrics["moe_aux"] = aux
+        return loss, metrics
+
+    # -------------------------------------------------------------- head
+
+    def _streaming_xent(self, zw, unemb, hn2, targets) -> Array:
+        """Sum-NLL with the (V, d) unembedding gathered one vocab chunk at
+        a time; log-sum-exp streams across chunks (flash-style, exact).
+
+        Full (T, V) logits never exist: each chunk's zero_apply computes
+        (per-token max, rel-sum-exp, gold-logit contribution) — (T,)-sized
+        outputs — and the scan combines them with the running-max rule.
+        """
+        z = self.zcfg
+        Vc = self.vchunk
+        T = hn2.shape[0]
+
+        def chunk_f(Wc, hn2, targets, c):
+            p = self.unemb_spec.unpack(Wc.astype(z.compute_dtype))
+            logits = jnp.einsum("td,vd->tv", hn2, p["unemb"],
+                                preferred_element_type=jnp.float32)
+            m_c = jnp.max(logits, axis=1)
+            s_c = jnp.sum(jnp.exp(logits - m_c[:, None]), axis=1)
+            idx = targets - c * Vc
+            in_r = (idx >= 0) & (idx < Vc)
+            g = jnp.take_along_axis(
+                logits, jnp.clip(idx, 0, Vc - 1)[:, None], axis=1)[:, 0]
+            return m_c, s_c, jnp.where(in_r, g, 0.0)
+
+        ap = zw(chunk_f)
+
+        def body(carry, xs):
+            m, l, gold = carry
+            Wc, c = xs
+            m_c, s_c, g_c = ap(Wc, hn2, targets, c)
+            m_new = jnp.maximum(m, m_c)
+            l = l * jnp.exp(m - m_new) + s_c * jnp.exp(m_c - m_new)
+            return (m_new, l, gold + g_c), ()
+
+        init = (jnp.full((T,), -1e30, jnp.float32),
+                jnp.zeros((T,), jnp.float32), jnp.zeros((T,), jnp.float32))
+        (m, l, gold), _ = lax.scan(
+            body, init, (unemb, jnp.arange(self.unemb_chunks,
+                                           dtype=jnp.int32)))
+        return jnp.sum(m + jnp.log(l) - gold)
+
+    def _head_logits(self, zi, params, h_last) -> Array:
+        """Serving head: (B, S, V) logits assembled from vocab chunks."""
+        z = self.zcfg
+        cfg = self.cfg
+
+        def norm_fn(W, hl):
+            p = self.head_spec.unpack(W.astype(z.compute_dtype))
+            return nn.rms_norm(hl, p["fnorm"])
+
+        hn = zi(norm_fn)(params["head"], h_last)
+
+        def chunk_f(Wc, hn):
+            p = self.unemb_spec.unpack(Wc.astype(z.compute_dtype))
+            return jnp.einsum("bsd,vd->bsv", hn, p["unemb"],
+                              preferred_element_type=jnp.float32)
+
+        ap = zi(chunk_f)
+
+        def body(carry, Wc):
+            return carry, ap(Wc, hn)
+
+        _, chunks = lax.scan(body, (), params["unemb"])  # (nv, B, S, Vc)
+        B, S = hn.shape[0], hn.shape[1]
+        return jnp.moveaxis(chunks, 0, 2).reshape(B, S, cfg.vocab)
+
+    # ------------------------------------------------------------ prefill
+
+    def prefill_fn(self, params, batch, rs: RunSpec
+                   ) -> Tuple[Array, Any]:
+        """Forward over a prompt; returns (last-token logits, caches)."""
+        cfg, z = self.cfg, self.zcfg
+        zi = lambda f: zero_apply_inference(f, z)
+        if cfg.embed_inputs:
+            h = batch["embeds"].astype(z.compute_dtype)
+        else:
+            h = zi(lambda W, t: self.embed_spec.unpack(W)["emb"][t]
+                   .astype(z.compute_dtype))(params["embed"], batch["tokens"])
+        B, S_loc = h.shape[0], h.shape[1]
+        pos = {"rope": self._rope_tables(batch, rs, S_loc)}
+
+        def period_fn(W, h, kinds=self.period, spec=self.period_spec):
+            p = spec.unpack(W.astype(z.compute_dtype))
+            caches = []
+            for i, kind in enumerate(kinds):
+                h, c, _ = apply_block(cfg, kind, _sub(p, f"{i}."), h, rs,
+                                      pos, None)
+                caches.append(c)
+            return h, tuple(caches)
+
+        if self.is_moe:
+            cos, sin = pos["rope"]
+
+            def body(h, xs):
+                pflat, eflat = xs
+                h2, c, _ = self._moe_layer(zi, rs, pflat, eflat, h,
+                                           cos, sin, None, None)
+                return h2, (c,)
+
+            h, caches = lax.scan(body, h,
+                                 (params["blocks"], params["experts"]))
+        else:
+            ap = zi(period_fn)
+
+            def body(h, pflat):
+                h2, caches = ap(pflat, h)
+                return h2, caches
+
+            h, caches = lax.scan(body, h, params["blocks"])
+        rem_caches = None
+        if self.rem_spec:
+            h, rem_caches = zi(partial(period_fn, kinds=self.period[:self.rem],
+                                       spec=self.rem_spec))(params["rem"], h)
+
+        from repro.models.transformer import _last_shard_value
+        h_last = _last_shard_value(h[:, -1:, :], rs.seq_axes)
+
+        logits = self._head_logits(zi, params, h_last)
+        return logits, {"blocks": caches, "rem": rem_caches}
+
+    # ------------------------------------------------------------- decode
+
+    def decode_fn(self, params, caches, batch, cache_pos: Array,
+                  rs: RunSpec) -> Tuple[Array, Any]:
+        """One decode step.  batch: tokens (B,1) or embeds (B,1,d)."""
+        cfg, z = self.cfg, self.zcfg
+        zi = lambda f: zero_apply_inference(f, z)
+        if cfg.embed_inputs:
+            h = batch["embeds"].astype(z.compute_dtype)
+        else:
+            h = zi(lambda W, t: self.embed_spec.unpack(W)["emb"][t]
+                   .astype(z.compute_dtype))(params["embed"], batch["tokens"])
+        pos = {"rope": self._rope_tables(batch, rs, 1, cache_pos=cache_pos),
+               "cache_pos": cache_pos}
+
+        def period_fn(W, h, cache, kinds=self.period, spec=self.period_spec):
+            p = spec.unpack(W.astype(z.compute_dtype))
+            new = []
+            for i, kind in enumerate(kinds):
+                h, c, _ = apply_block(cfg, kind, _sub(p, f"{i}."), h, rs,
+                                      pos, cache[i])
+                new.append(c)
+            return h, tuple(new)
+
+        if self.is_moe:
+            cos, sin = pos["rope"]
+
+            def body(h, xs):
+                pflat, eflat, cache = xs
+                h2, c, _ = self._moe_layer(zi, rs, pflat, eflat, h,
+                                           cos, sin, pos["cache_pos"],
+                                           cache[0])
+                return h2, (c,)
+
+            h, new_caches = lax.scan(
+                body, h,
+                (params["blocks"], params["experts"], caches["blocks"]))
+        else:
+            ap = zi(period_fn)
+
+            def body(h, xs):
+                pflat, cache = xs
+                h2, new = ap(pflat, h, cache)
+                return h2, new
+
+            h, new_caches = lax.scan(body, h,
+                                     (params["blocks"], caches["blocks"]))
+        new_rem = None
+        if self.rem_spec:
+            h, new_rem = zi(partial(period_fn, kinds=self.period[:self.rem],
+                                    spec=self.rem_spec))(
+                params["rem"], h, caches["rem"])
+
+        logits = self._head_logits(zi, params, h)
+        return logits, {"blocks": new_caches, "rem": new_rem}
+
+    # ------------------------------------------------------------- caches
+
+    def cache_shapes(self, batch: int, kv_len: int, dtype=jnp.bfloat16):
+        """GLOBAL cache shapes pytree matching decode_fn's layout."""
+        per = [init_cache_shapes(self.cfg, k, batch, kv_len, dtype)
+               for k in self.period]
+        stacked = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((self.n_periods,) + s.shape,
+                                           s.dtype), tuple(per))
+        rem = None
+        if self.rem_spec:
+            rem = tuple(init_cache_shapes(self.cfg, k, batch, kv_len, dtype)
+                        for k in self.period[: self.rem])
+        return {"blocks": stacked, "rem": rem}
+
+    def init_caches(self, batch: int, kv_len: int, dtype=jnp.bfloat16):
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.cache_shapes(batch, kv_len, dtype))
+
+
+def _xent_chunked(h2d: Array, unemb: Array, targets: Array,
+                  chunk: int = 1024) -> Array:
+    """Sum-NLL with logits materialized one token-chunk at a time (fp32 LSE),
+    rematerialized in backward — keeps the (T, V) logits out of memory."""
+    T, d = h2d.shape
+    if T <= chunk:
+        nll, _ = nn.softmax_xent((h2d @ unemb)[None], targets[None])
+        return nll
+    n = T // chunk
+    rem = T - n * chunk
+
+    @jax.checkpoint
+    def chunk_nll(hc, tc):
+        nll, _ = nn.softmax_xent((hc @ unemb)[None], tc[None])
+        return nll
+
+    def body(acc, xs):
+        hc, tc = xs
+        return acc + chunk_nll(hc, tc), ()
+
+    acc, _ = lax.scan(body, jnp.float32(0),
+                      (h2d[: n * chunk].reshape(n, chunk, d),
+                       targets[: n * chunk].reshape(n, chunk)))
+    if rem:
+        acc = acc + chunk_nll(h2d[n * chunk:], targets[n * chunk:])
+    return acc

@@ -1,0 +1,214 @@
+"""Fine-grained Mixture-of-Experts (DeepSeekMoE / Qwen3-MoE style).
+
+shared experts (always on) + routed experts with top-k gating.  Dispatch is
+sort-based (argsort tokens by expert, capacity-bounded scatter/gather) —
+O(T·k log) index work instead of a dense (T, E, C) one-hot tensor, which
+matters at 128 experts.  Under ZeRO++ the expert weights are ordinary flat
+parameters (gathered per layer by the engine); no expert-parallel all-to-all
+is required, which is exactly the paper's "no model code refactoring" point.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class MoEOut(NamedTuple):
+    y: Array          # (T, d)
+    aux_loss: Array   # () switch-style load-balance loss
+    dropped_frac: Array  # () fraction of (token, expert) slots dropped
+
+
+class Dispatch(NamedTuple):
+    """Routing result: token->expert-slot assignment (pure index work).
+
+    Splitting dispatch from expert compute lets the ZeRO++ engine gather
+    expert weights in CHUNKS (one zero_apply per chunk) — the analogue of
+    DeepSpeed's per-module gather granularity, without which a 128-expert
+    layer would materialize multi-GB gathered weight buffers.
+
+    Only INDICES are stored (not the (E, cap, d) slot buffer): each chunk
+    rebuilds its slice of the buffer from the token activations inside its
+    own gather scope, so the activation residual per MoE layer is the
+    (T, d) token tensor, not the ~top_k×capacity_factor× larger slot buffer.
+    """
+    cap: int          # static slots per expert
+    gates: Array      # (T, k) fp32 combine weights
+    keep: Array       # (T*k,) bool  slot-capacity survivors (sorted order)
+    dest: Array       # (T*k,) int32 slot index (E*cap = dropped)
+    src_tok: Array    # (T*k,) int32 source token row for each sorted pair
+    g_sorted: Array   # (T*k,) fp32 gate value per sorted pair.  The gate
+                      # multiply happens INSIDE each expert chunk (so the
+                      # router gradient is produced by the chunk's own
+                      # recompute); the final combine is a pure gather-sum
+                      # whose VJP needs only indices — otherwise autodiff
+                      # saves a (T, k, d) expert-output residual PER LAYER.
+    inv: Array        # (T*k,) int32 inverse sort permutation
+    aux_loss: Array   # ()
+    dropped_frac: Array  # ()
+
+
+def route_topk(logits: Array, top_k: int,
+               norm_topk: bool = True) -> Tuple[Array, Array]:
+    """Softmax-then-top-k routing (DeepSeek / Qwen convention).
+
+    Returns (gates (T, k) fp32, expert_idx (T, k) int32).
+    """
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gates, idx = jax.lax.top_k(probs, top_k)
+    if norm_topk:
+        gates = gates / (jnp.sum(gates, axis=-1, keepdims=True) + 1e-9)
+    return gates, idx
+
+
+def serve_capacity(T: int, top_k: int, E: int, cf: float = 2.0) -> int:
+    """Inference capacity: exact (drop-free) for small token counts
+    (decode), generously padded for prefill.  Training keeps the paper-
+    style statistical capacity; serving must not drop tokens or decode
+    would diverge from prefill."""
+    stat = -(-int(T * top_k * cf) // E)
+    return int(min(T * top_k, max(stat, 8 * top_k)))
+
+
+def moe_dispatch(
+    x: Array,                 # (T, d) tokens
+    logits: Array,            # (T, E) router logits
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    norm_topk: bool = True,
+    capacity: Optional[int] = None,
+) -> Dispatch:
+    """Route tokens into capacity-bounded per-expert slot buffers."""
+    T, d = x.shape
+    E = logits.shape[-1]
+    gates, eidx = route_topk(logits, top_k, norm_topk)
+
+    # ---- load-balance aux loss (Switch eq. 4) -----------------------------
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    me = jnp.mean(probs, axis=0)                      # mean router prob / expert
+    onehot = jax.nn.one_hot(eidx, E, dtype=jnp.float32)  # (T, k, E)
+    ce = jnp.mean(jnp.sum(onehot, axis=1), axis=0) / top_k  # token frac / expert
+    aux = E * jnp.sum(me * ce)
+
+    # ---- sort-based dispatch ----------------------------------------------
+    cap = capacity if capacity is not None \
+        else int(max(1, (T * top_k * capacity_factor) // E))
+    e_flat = eidx.reshape(-1)                         # (T*k,)
+    tok_of = jnp.repeat(jnp.arange(T), top_k)
+
+    order = jnp.argsort(e_flat, stable=True)
+    e_sorted = e_flat[order]
+    # slot of each routed pair within its expert
+    group_start = jnp.searchsorted(e_sorted, jnp.arange(E), side="left")
+    slot = jnp.arange(T * top_k) - group_start[e_sorted]
+    keep = slot < cap
+    dest = jnp.where(keep, e_sorted * cap + slot, E * cap)  # overflow bin
+
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    inv = jnp.argsort(order)
+    return Dispatch(cap, gates, keep, dest, tok_of[order],
+                    gates.reshape(-1)[order], inv, aux, dropped)
+
+
+def build_chunk_buf(x: Array, dest: Array, src_tok: Array,
+                    chunk_start_slot: Array, chunk_slots: int) -> Array:
+    """Materialize one expert chunk's slot buffer from token activations.
+
+    x: (T, d); dest/src_tok from Dispatch; chunk_start_slot: () int32
+    (= chunk_index * Ec * cap, may be traced); chunk_slots: Ec * cap.
+    Returns (chunk_slots, d) with an implicit overflow row dropped.
+    """
+    local = dest - chunk_start_slot
+    in_chunk = (local >= 0) & (local < chunk_slots)
+    idx = jnp.where(in_chunk, local, chunk_slots)     # out-of-chunk -> dropped
+    buf = jnp.zeros((chunk_slots + 1, x.shape[-1]), x.dtype)
+    buf = buf.at[idx].set(x[src_tok], mode="drop")
+    return buf[:chunk_slots]
+
+
+def expert_ffn(buf: Array, w_gate_up: Array, w_down: Array) -> Array:
+    """Grouped expert GEMMs on a (chunk of) slot buffer.
+
+    buf: (Ec, cap, d); w_gate_up: (Ec, d, 2*ff); w_down: (Ec, ff, d).
+    Called once per expert chunk under its own zero_apply gather.
+    """
+    gu = jnp.einsum("ecd,edf->ecf", buf, w_gate_up)
+    g, u = jnp.split(gu, 2, axis=-1)
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("ecf,efd->ecd", h, w_down)
+
+
+def build_chunk_gates(g_sorted: Array, dest: Array, chunk_start_slot,
+                      chunk_slots: int) -> Array:
+    """(chunk_slots,) gate value per slot of one expert chunk."""
+    local = dest - chunk_start_slot
+    in_chunk = (local >= 0) & (local < chunk_slots)
+    idx = jnp.where(in_chunk, local, chunk_slots)
+    g = jnp.zeros((chunk_slots + 1,), g_sorted.dtype)
+    return g.at[idx].set(g_sorted, mode="drop")[:chunk_slots]
+
+
+def moe_combine(out: Array, disp: Dispatch, out_dtype=None) -> Array:
+    """Scatter (already gate-weighted) expert outputs back to tokens.
+
+    out: (E, cap, d) slot outputs, gates already applied in-chunk — this is
+    a pure gather-sum, so its VJP saves indices only.
+    """
+    E, cap, d = out.shape
+    T = disp.gates.shape[0]
+    top_k = disp.gates.shape[1]
+    out_flat = jnp.concatenate(
+        [out.reshape(E * cap, d), jnp.zeros((1, d), out.dtype)], axis=0)
+    y_sorted = out_flat[jnp.where(disp.keep, disp.dest, E * cap)]
+    y_pairs = y_sorted[disp.inv].reshape(T, top_k, d)
+    return jnp.sum(y_pairs, axis=1) if out_dtype is None \
+        else jnp.sum(y_pairs, axis=1).astype(out_dtype)
+
+
+def moe_ffn_chunked(x, disp: Dispatch, w_gate_up, w_down) -> Array:
+    """Reference single-shot expert pass via the chunk primitives."""
+    E = w_gate_up.shape[0]
+    buf = build_chunk_buf(x, disp.dest, disp.src_tok, jnp.int32(0),
+                          E * disp.cap).reshape(E, disp.cap, -1)
+    out = expert_ffn(buf, w_gate_up, w_down)
+    g = build_chunk_gates(disp.g_sorted, disp.dest, jnp.int32(0),
+                          E * disp.cap).reshape(E, disp.cap, 1)
+    return moe_combine(out * g.astype(out.dtype), disp)
+
+
+def shared_ffn(x: Array, shared_gate_up: Array, shared_down: Array) -> Array:
+    """Always-on shared experts (DeepSeekMoE)."""
+    gu_s = x @ shared_gate_up
+    gs, us = jnp.split(gu_s, 2, axis=-1)
+    return (jax.nn.silu(gs) * us) @ shared_down
+
+
+def moe_mlp(
+    x: Array,                 # (T, d) tokens
+    router_w: Array,          # (d, E)
+    w_gate_up: Array,         # (E, d, 2*ff) routed experts, fused gate|up
+    w_down: Array,            # (E, ff, d)
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    norm_topk: bool = True,
+    shared_gate_up: Optional[Array] = None,  # (d, 2*ff_shared)
+    shared_down: Optional[Array] = None,     # (ff_shared, d)
+) -> MoEOut:
+    """Single-shot token-choice top-k MoE (dispatch + all experts + combine).
+
+    Reference composition of the pieces above; the Model uses the chunked
+    path so expert gathers stay bounded.
+    """
+    logits = x @ router_w                             # (T, E)
+    disp = moe_dispatch(x, logits, top_k=top_k,
+                        capacity_factor=capacity_factor, norm_topk=norm_topk)
+    y = moe_ffn_chunked(x, disp, w_gate_up, w_down)
+    if shared_gate_up is not None:
+        y = y + shared_ffn(x, shared_gate_up, shared_down)
+    return MoEOut(y.astype(x.dtype), disp.aux_loss, disp.dropped_frac)

@@ -1,0 +1,18 @@
+"""LR schedules (callable on the fp32 step count)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak: float, warmup: int, total: int, floor: float = 0.1):
+    def sched(count):
+        c = count.astype(jnp.float32)
+        warm = peak * c / max(warmup, 1)
+        prog = jnp.clip((c - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(c < warmup, warm, cos)
+    return sched
+
+
+def constant(lr: float):
+    return lambda count: jnp.float32(lr)

@@ -1,0 +1,1 @@
+from repro.testing import checks, subproc  # noqa: F401

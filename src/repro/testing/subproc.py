@@ -1,0 +1,51 @@
+"""Run multi-device checks in a subprocess with simulated host devices.
+
+jax pins the device count at first backend init, and the main pytest process
+must keep seeing exactly one CPU device (see dryrun.py's device-count note).
+Multi-device semantics are therefore exercised by spawning a fresh python
+with ``--xla_force_host_platform_device_count=N`` and invoking a named check
+function from :mod:`repro.testing.checks`.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+from typing import Optional, Sequence
+
+_SNIPPET = """
+import os, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n}"
+from repro.testing import checks
+fns = {fns!r}
+for fn in fns:
+    getattr(checks, fn)()
+    print("PASS", fn)
+"""
+
+
+def run_checks(fn_names: Sequence[str], n_devices: int = 8,
+               timeout: int = 600, extra_env: Optional[dict] = None) -> str:
+    """Run named functions from repro.testing.checks under N host devices.
+
+    Raises AssertionError with the subprocess output on failure; returns the
+    combined stdout on success.
+    """
+    env = dict(os.environ)
+    src_dir = os.path.join(os.path.dirname(__file__), "..", "..")
+    env["PYTHONPATH"] = os.path.abspath(src_dir) + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    if extra_env:
+        env.update(extra_env)
+    code = _SNIPPET.format(n=n_devices, fns=list(fn_names))
+    proc = subprocess.run(
+        [sys.executable, "-c", code],
+        env=env, capture_output=True, text=True, timeout=timeout,
+    )
+    out = proc.stdout + proc.stderr
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"multi-device check {fn_names} failed (rc={proc.returncode}):\n{out}")
+    for fn in fn_names:
+        assert f"PASS {fn}" in out, f"missing PASS marker for {fn}:\n{out}"
+    return out

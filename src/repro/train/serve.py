@@ -1,0 +1,177 @@
+"""Serving-path builders: prefill and decode steps under shard_map.
+
+The serving layout keeps parameters ZeRO-sharded (flat buffers over every
+mesh axis) and gathers per layer group exactly like training's forward —
+with qwZ the gather moves INT8.  KV caches shard their batch dim over the
+slow axes and their sequence dim over ``kv_axes``; decode uses the exact
+2-pass split-KV softmax so any kv sharding works.
+
+Shape policy (see configs.base.SHAPES):
+  * prefill_32k  — batch over ('pod','data'), prompt sequence over 'model'
+                   (kv cache inherits the same layout).
+  * decode_32k   — batch over ('pod','data'), cache sequence over 'model'.
+  * long_500k    — global_batch=1: batch unsharded, cache sequence over
+                   EVERY mesh axis (the only way 0.5M tokens of KV fit).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.model import Model
+from repro.models.transformer import RunSpec
+from repro.train.trainer import param_specs
+
+Array = jax.Array
+
+
+def _opt(axes) -> Optional[Tuple[str, ...]]:
+    t = tuple(axes)
+    return t or None
+
+
+def cache_specs(model: Model, batch_axes, kv_axes) -> Dict[str, Any]:
+    """PartitionSpec tree matching ``model.cache_shapes`` exactly."""
+    b = _opt(batch_axes)
+    kv = _opt(kv_axes)
+
+    def for_kind(kind: str, stacked: bool):
+        L = (None,) if stacked else ()
+        if kind in ("attn", "local", "moe"):
+            s = P(*L, b, kv, None, None)
+            return {"k": s, "v": s}
+        if kind == "ssd":
+            return {"h": P(*L, b, None, None, None),
+                    "conv": P(*L, b, None, None)}
+        if kind == "rec":
+            return {"h": P(*L, b, None), "conv": P(*L, b, None, None)}
+        raise ValueError(kind)
+
+    blocks = tuple(for_kind(k, True) for k in model.period)
+    rem = tuple(for_kind(k, False) for k in model.period[: model.rem]) \
+        if model.rem_spec else None
+    return {"blocks": blocks, "rem": rem}
+
+
+def serve_batch_specs(model: Model, batch_axes, seq_axes) -> Dict[str, P]:
+    b = _opt(batch_axes)
+    s = _opt(seq_axes)
+    cfg = model.cfg
+    out = {}
+    if cfg.embed_inputs:
+        out["embeds"] = P(b, s, None)
+    else:
+        out["tokens"] = P(b, s)
+    if cfg.mrope:
+        out["positions"] = P(None, b, s)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeStep:
+    fn: Callable
+    mesh: Any
+    in_specs: Tuple[Any, ...]
+    out_specs: Tuple[Any, ...]
+    run_spec: RunSpec
+
+
+def build_prefill_step(model: Model, mesh,
+                       batch_axes: Tuple[str, ...],
+                       seq_axes: Tuple[str, ...]) -> ServeStep:
+    """Prompt ingestion: (params, batch) -> (last-token logits, caches).
+
+    The prefill KV cache inherits the activation layout, so kv_axes ==
+    seq_axes by construction.
+    """
+    rs = RunSpec(mode="prefill", seq_axes=tuple(seq_axes),
+                 kv_axes=tuple(seq_axes))
+    p_specs = param_specs(model, tuple(mesh.axis_names))
+    b_specs = serve_batch_specs(model, batch_axes, seq_axes)
+    c_specs = cache_specs(model, batch_axes, seq_axes)
+    logit_spec = P(_opt(batch_axes), None, None)
+
+    def stepf(params, batch):
+        return model.prefill_fn(params, batch, rs)
+
+    sm = jax.shard_map(stepf, mesh=mesh,
+                       in_specs=(p_specs, b_specs),
+                       out_specs=(logit_spec, c_specs),
+                       check_vma=False)
+    return ServeStep(fn=jax.jit(sm), mesh=mesh,
+                     in_specs=(p_specs, b_specs),
+                     out_specs=(logit_spec, c_specs), run_spec=rs)
+
+
+def build_decode_step(model: Model, mesh,
+                      batch_axes: Tuple[str, ...],
+                      kv_axes: Tuple[str, ...],
+                      donate: bool = True) -> ServeStep:
+    """One-token decode: (params, caches, batch, cache_pos) ->
+    (logits, new caches)."""
+    rs = RunSpec(mode="decode", kv_axes=tuple(kv_axes))
+    p_specs = param_specs(model, tuple(mesh.axis_names))
+    b_specs = serve_batch_specs(model, batch_axes, ())
+    c_specs = cache_specs(model, batch_axes, kv_axes)
+    logit_spec = P(_opt(batch_axes), None, None)
+
+    def stepf(params, caches, batch, cache_pos):
+        return model.decode_fn(params, caches, batch, cache_pos, rs)
+
+    sm = jax.shard_map(stepf, mesh=mesh,
+                       in_specs=(p_specs, c_specs, b_specs, P()),
+                       out_specs=(logit_spec, c_specs),
+                       check_vma=False)
+    fn = jax.jit(sm, donate_argnums=(1,) if donate else ())
+    return ServeStep(fn=fn, mesh=mesh,
+                     in_specs=(p_specs, c_specs, b_specs, P()),
+                     out_specs=(logit_spec, c_specs), run_spec=rs)
+
+
+def pad_prefill_caches(model: Model, caches, kv_len: int):
+    """Grow prefill KV caches (length = prompt) to decode capacity.
+
+    Full-attention caches use slot == position, so zero-padding the
+    sequence dim to ``kv_len`` is exact (padded slots are masked out by the
+    position-validity test in decode_attend).  Ring buffers (local window)
+    and recurrent states are already capacity-sized.
+    """
+    import jax.numpy as jnp
+
+    def grow(kind, cache, stacked):
+        if kind not in ("attn", "moe") or cache is None:
+            return cache
+        axis = 2 if stacked else 1
+        out = {}
+        for key in ("k", "v"):
+            arr = cache[key]
+            pad = kv_len - arr.shape[axis]
+            if pad > 0:
+                widths = [(0, 0)] * arr.ndim
+                widths[axis] = (0, pad)
+                arr = jnp.pad(arr, widths)
+            out[key] = arr
+        return out
+
+    blocks = tuple(grow(k, c, True)
+                   for k, c in zip(model.period, caches["blocks"]))
+    rem = caches.get("rem")
+    if rem is not None:
+        rem = tuple(grow(k, c, False)
+                    for k, c in zip(model.period[: model.rem], rem))
+    return {"blocks": blocks, "rem": rem}
+
+
+def serve_shape_policy(shape_name: str, mesh_axes: Tuple[str, ...]
+                       ) -> Tuple[Tuple[str, ...], Tuple[str, ...]]:
+    """(batch_axes, kv_axes) for a named inference shape."""
+    fast = ("model",)
+    slow = tuple(a for a in mesh_axes if a != "model")
+    if shape_name == "long_500k":
+        return (), tuple(mesh_axes)      # B=1: shard the cache everywhere
+    return slow, fast

@@ -1,0 +1,36 @@
+"""Multi-device collective equivalence tests (subprocess, 8 simulated devices).
+
+The actual assertions live in repro.testing.checks; see subproc.py for why
+these run out-of-process.  Grouped to amortize jax startup cost.
+"""
+import pytest
+
+from repro.testing.subproc import run_checks
+
+
+@pytest.mark.slow
+def test_qgz_group():
+    run_checks([
+        "check_qgz_matches_reduce_scatter",
+        "check_qgz_exact_when_representable",
+        "check_qgz_multipod",
+    ], n_devices=8)
+
+
+@pytest.mark.slow
+def test_qgz_variants_group():
+    run_checks(["check_qgz_1hop_and_ring"], n_devices=8)
+
+
+@pytest.mark.slow
+def test_qwz_hpz_group():
+    run_checks(["check_qwz_all_gather", "check_hpz_roundtrip"], n_devices=8)
+
+
+@pytest.mark.slow
+def test_engine_group():
+    run_checks([
+        "check_engine_baseline_matches_local",
+        "check_engine_zeropp_close_to_local",
+        "check_engine_hpz_consistency",
+    ], n_devices=8)

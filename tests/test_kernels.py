@@ -1,0 +1,199 @@
+"""Pallas kernel validation: interpret-mode kernels vs pure-jnp oracles.
+
+Per the spec, each kernel is swept over shapes/dtypes and checked with
+assert_allclose against ref.py.  Round-to-nearest ties are the only
+permitted divergence source (jnp.round is ties-to-even in both paths, so in
+practice the match is exact).
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quant import QuantConfig, dequantize_blockwise
+from repro.kernels import ref
+from repro.kernels.quant_block import (
+    dequantize_pallas,
+    pick_tiles,
+    quantize_pallas,
+    quantize_reordered_pallas,
+)
+from repro.kernels.fused_dequant_reduce_quant import (
+    dequant_reduce_pallas,
+    dequant_reduce_quant_pallas,
+)
+
+INTERP = dict(interpret=True)
+
+
+def _jit(fn, **kw):
+    """Jit with static kwargs.  Kernel and ref are BOTH compared under jit:
+    eager XLA and jitted XLA may differ by 1 ulp in division fusion, which
+    flips round-to-nearest ties; inside jit the two paths are bit-equal."""
+    import functools
+    return jax.jit(functools.partial(fn, **kw))
+
+
+def _rand(shape, dtype, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal(shape) * scale).astype(np.float32)
+    return jnp.asarray(x, dtype=dtype)
+
+
+SWEEP = [
+    # (rows, cols, block, bits, dtype)
+    (1, 256, 256, 8, jnp.float32),
+    (8, 512, 128, 8, jnp.float32),
+    (16, 1024, 256, 4, jnp.float32),
+    (3, 384, 128, 4, jnp.bfloat16),
+    (7, 768, 256, 8, jnp.bfloat16),
+    (32, 2048, 512, 4, jnp.float32),
+    (2, 8192, 1024, 8, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("rows,cols,block,bits,dtype", SWEEP)
+def test_quantize_matches_ref(rows, cols, block, bits, dtype):
+    cfg = QuantConfig(bits=bits, block_size=block)
+    x = _rand((rows, cols), dtype, seed=rows * cols)
+    p_k, s_k = _jit(quantize_pallas, cfg=cfg, **INTERP)(x)
+    p_r, s_r = _jit(ref.quantize_ref, cfg=cfg)(x)
+    np.testing.assert_array_equal(np.asarray(p_k), np.asarray(p_r))
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r), rtol=1e-6)
+
+
+@pytest.mark.parametrize("rows,cols,block,bits,dtype", SWEEP)
+def test_dequantize_matches_ref(rows, cols, block, bits, dtype):
+    cfg = QuantConfig(bits=bits, block_size=block)
+    x = _rand((rows, cols), dtype, seed=rows + cols)
+    p, s = ref.quantize_ref(x, cfg)
+    got = _jit(dequantize_pallas, cfg=cfg, out_dtype=jnp.float32, **INTERP)(p, s)
+    want = _jit(ref.dequantize_ref, cfg=cfg, out_dtype=jnp.float32)(p, s)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@pytest.mark.parametrize("rows,cols,block,bits,dtype", SWEEP[:4])
+def test_quant_roundtrip_error_bound(rows, cols, block, bits, dtype):
+    """|dequant(quant(x)) - x| <= scale/2 per block (symmetric quant)."""
+    cfg = QuantConfig(bits=bits, block_size=block)
+    x = _rand((rows, cols), dtype, seed=5)
+    p, s = _jit(quantize_pallas, cfg=cfg, **INTERP)(x)
+    rt = _jit(dequantize_pallas, cfg=cfg, out_dtype=jnp.float32, **INTERP)(p, s)
+    err = np.abs(np.asarray(rt) - np.asarray(x, dtype=np.float32))
+    bound = np.repeat(np.asarray(s), block, axis=-1) / 2 + 1e-7
+    assert (err <= bound * 1.001).all()
+
+
+@pytest.mark.parametrize("Y,X,L,block,bits", [
+    (2, 2, 256, 128, 4),
+    (4, 2, 512, 256, 4),
+    (3, 5, 1024, 256, 8),
+    (16, 2, 256, 128, 4),
+])
+def test_quantize_reordered_matches_ref(Y, X, L, block, bits):
+    cfg = QuantConfig(bits=bits, block_size=block)
+    x = _rand((Y, X, L), jnp.float32, seed=Y * X)
+    p_k, s_k = _jit(quantize_reordered_pallas, cfg=cfg, **INTERP)(x)
+    p_r, s_r = _jit(ref.quantize_reordered_ref, cfg=cfg)(x)
+    np.testing.assert_array_equal(np.asarray(p_k), np.asarray(p_r))
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r), rtol=1e-6)
+
+
+@pytest.mark.parametrize("N,C,block,bits", [
+    (2, 256, 128, 4),
+    (8, 512, 256, 4),
+    (16, 1024, 256, 8),
+    (4, 4096, 512, 4),
+])
+def test_dequant_reduce_matches_ref(N, C, block, bits):
+    cfg = QuantConfig(bits=bits, block_size=block)
+    x = _rand((N, C), jnp.float32, seed=N * C)
+    p, s = ref.quantize_ref(x, cfg)
+    got = _jit(dequant_reduce_pallas, cfg=cfg, **INTERP)(p, s)
+    want = _jit(ref.dequant_reduce_ref, cfg=cfg)(p, s)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("N,C,block,bits_in,bits_out", [
+    (2, 256, 128, 4, 4),
+    (8, 512, 256, 4, 4),
+    (4, 1024, 256, 8, 4),
+    (16, 512, 128, 4, 8),
+])
+def test_dequant_reduce_quant_matches_ref(N, C, block, bits_in, bits_out):
+    cfg_in = QuantConfig(bits=bits_in, block_size=block)
+    cfg_out = QuantConfig(bits=bits_out, block_size=block)
+    x = _rand((N, C), jnp.float32, seed=N + C)
+    p, s = ref.quantize_ref(x, cfg_in)
+    p_k, s_k = _jit(dequant_reduce_quant_pallas, cfg_in=cfg_in, cfg_out=cfg_out, **INTERP)(p, s)
+    p_r, s_r = _jit(ref.dequant_reduce_quant_ref, cfg_in=cfg_in, cfg_out=cfg_out)(p, s)
+    np.testing.assert_array_equal(np.asarray(p_k), np.asarray(p_r))
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# property-based sweeps (hypothesis)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(
+    rows=st.integers(1, 12),
+    nblocks=st.integers(1, 6),
+    block_pow=st.integers(5, 9),        # block 32..512
+    bits=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_prop_kernel_equals_ref(rows, nblocks, block_pow, bits, seed):
+    block = 2 ** block_pow
+    cfg = QuantConfig(bits=bits, block_size=block)
+    x = _rand((rows, nblocks * block), jnp.float32, seed=seed, scale=3.0)
+    p_k, s_k = _jit(quantize_pallas, cfg=cfg, **INTERP)(x)
+    p_r, s_r = _jit(ref.quantize_ref, cfg=cfg)(x)
+    np.testing.assert_array_equal(np.asarray(p_k), np.asarray(p_r))
+    got = _jit(dequantize_pallas, cfg=cfg, out_dtype=jnp.float32, **INTERP)(p_k, s_k)
+    want = _jit(ref.dequantize_ref, cfg=cfg, out_dtype=jnp.float32)(p_r, s_r)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 16),
+    nblocks=st.integers(1, 4),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_prop_fused_reduce_is_fp32_exact(n, nblocks, seed):
+    """The fused kernel's reduction must be bit-identical to an fp32 sum of
+    the individually dequantized contributions (the paper's accuracy
+    argument hinges on full-precision reduction)."""
+    cfg = QuantConfig(bits=4, block_size=128)
+    x = _rand((n, nblocks * 128), jnp.float32, seed=seed)
+    p, s = ref.quantize_ref(x, cfg)
+    got = _jit(dequant_reduce_pallas, cfg=cfg, **INTERP)(p, s)
+    want = _jit(lambda p, s: jnp.sum(dequantize_blockwise(p, s, cfg, jnp.float32), axis=0))(p, s)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_pick_tiles_divides():
+    for rows, cols, block in [(1, 256, 256), (13, 13 * 512, 128),
+                              (64, 8192, 1024), (5, 640, 64)]:
+        rt, ct = pick_tiles(rows, cols, block)
+        assert rows % rt == 0 and cols % ct == 0 and ct % block == 0
+
+
+def test_ops_dispatch_ref_equals_interpret():
+    """ops.py must produce identical results whichever path it picks."""
+    from repro.kernels import ops
+    cfg = QuantConfig(bits=4, block_size=128)
+    x = _rand((4, 512), jnp.float32, seed=11)
+    old = ops.FORCE
+    try:
+        ops.FORCE = "ref"
+        p1, s1 = ops.quantize_blockwise(x, cfg)
+        ops.FORCE = "interpret"
+        p2, s2 = ops.quantize_blockwise(x, cfg)
+    finally:
+        ops.FORCE = old
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)

@@ -1,0 +1,120 @@
+"""SSD (Mamba-2) and RG-LRU vs naive sequential recurrence oracles."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models.ssm import ssd_scan, ssd_step, rglru_scan, rglru_step
+
+
+def naive_ssd(x, dt, A, Bm, Cm, h0=None):
+    """O(S) sequential oracle: h_t = exp(dt_t A) h + dt_t B_t x_t^T; y=C·h."""
+    B, S, nh, hp = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    hg = nh // G
+    h = np.zeros((B, nh, N, hp), np.float64) if h0 is None else h0.astype(np.float64).copy()
+    ys = np.zeros((B, S, nh, hp), np.float64)
+    for t in range(S):
+        for g in range(G):
+            for hh in range(g * hg, (g + 1) * hg):
+                decay = np.exp(dt[:, t, hh] * A[hh])  # (B,)
+                outer = (dt[:, t, hh, None, None]
+                         * Bm[:, t, g, :, None] * x[:, t, hh, None, :])
+                h[:, hh] = decay[:, None, None] * h[:, hh] + outer
+                ys[:, t, hh] = np.einsum("bn,bnp->bp", Cm[:, t, g], h[:, hh])
+    return ys, h
+
+
+@pytest.mark.parametrize("chunk", [4, 8])
+def test_ssd_matches_naive(chunk):
+    rng = np.random.default_rng(0)
+    B, S, nh, hp, G, N = 2, 16, 4, 8, 2, 6
+    x = rng.normal(size=(B, S, nh, hp)).astype(np.float32)
+    dt = rng.uniform(0.1, 0.9, size=(B, S, nh)).astype(np.float32)
+    A = -rng.uniform(0.5, 2.0, size=(nh,)).astype(np.float32)
+    Bm = rng.normal(size=(B, S, G, N)).astype(np.float32)
+    Cm = rng.normal(size=(B, S, G, N)).astype(np.float32)
+
+    y, hf = ssd_scan(jnp.asarray(x), jnp.asarray(dt), jnp.asarray(A),
+                     jnp.asarray(Bm), jnp.asarray(Cm), chunk=chunk)
+    y_ref, h_ref = naive_ssd(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(hf), h_ref, rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_carried_state():
+    rng = np.random.default_rng(1)
+    B, S, nh, hp, G, N = 1, 8, 2, 4, 1, 3
+    x = rng.normal(size=(B, S, nh, hp)).astype(np.float32)
+    dt = rng.uniform(0.1, 0.9, size=(B, S, nh)).astype(np.float32)
+    A = -rng.uniform(0.5, 2.0, size=(nh,)).astype(np.float32)
+    Bm = rng.normal(size=(B, S, G, N)).astype(np.float32)
+    Cm = rng.normal(size=(B, S, G, N)).astype(np.float32)
+    h0 = rng.normal(size=(B, nh, N, hp)).astype(np.float32)
+
+    y, hf = ssd_scan(jnp.asarray(x), jnp.asarray(dt), jnp.asarray(A),
+                     jnp.asarray(Bm), jnp.asarray(Cm), chunk=4,
+                     h0=jnp.asarray(h0))
+    y_ref, h_ref = naive_ssd(x, dt, A, Bm, Cm, h0=h0)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(hf), h_ref, rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_step_matches_scan():
+    """Decoding token-by-token must equal the chunked scan."""
+    rng = np.random.default_rng(2)
+    B, S, nh, hp, G, N = 2, 8, 4, 4, 1, 5
+    x = rng.normal(size=(B, S, nh, hp)).astype(np.float32)
+    dt = rng.uniform(0.1, 0.9, size=(B, S, nh)).astype(np.float32)
+    A = -rng.uniform(0.5, 2.0, size=(nh,)).astype(np.float32)
+    Bm = rng.normal(size=(B, S, G, N)).astype(np.float32)
+    Cm = rng.normal(size=(B, S, G, N)).astype(np.float32)
+
+    y_scan, hf = ssd_scan(*map(jnp.asarray, (x, dt, A, Bm, Cm)), chunk=4)
+    h = jnp.zeros((B, nh, N, hp), jnp.float32)
+    ys = []
+    for t in range(S):
+        y, h = ssd_step(jnp.asarray(x[:, t]), jnp.asarray(dt[:, t]),
+                        jnp.asarray(A), jnp.asarray(Bm[:, t]),
+                        jnp.asarray(Cm[:, t]), h)
+        ys.append(np.asarray(y))
+    np.testing.assert_allclose(np.stack(ys, 1), np.asarray(y_scan),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hf), rtol=2e-4, atol=2e-4)
+
+
+def naive_rglru(x, r, i, log_a, h0=None):
+    B, S, D = x.shape
+    h = np.zeros((B, D), np.float64) if h0 is None else h0.astype(np.float64).copy()
+    ys = np.zeros((B, S, D), np.float64)
+    for t in range(S):
+        a = np.exp(log_a[None] * r[:, t])
+        b = np.sqrt(np.clip(1 - a ** 2, 0, 1)) * (i[:, t] * x[:, t])
+        h = a * h + b
+        ys[:, t] = h
+    return ys, h
+
+
+def test_rglru_matches_naive():
+    rng = np.random.default_rng(3)
+    B, S, D = 2, 12, 8
+    x = rng.normal(size=(B, S, D)).astype(np.float32)
+    r = rng.uniform(0, 1, size=(B, S, D)).astype(np.float32)
+    i = rng.uniform(0, 1, size=(B, S, D)).astype(np.float32)
+    log_a = -rng.uniform(0.1, 3.0, size=(D,)).astype(np.float32)
+    h0 = rng.normal(size=(B, D)).astype(np.float32)
+
+    y, hf = rglru_scan(*map(jnp.asarray, (x, r, i)), jnp.asarray(log_a),
+                       h0=jnp.asarray(h0))
+    y_ref, h_ref = naive_rglru(x, r, i, log_a, h0)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(hf), h_ref, rtol=2e-4, atol=2e-4)
+
+    # decode path
+    h = jnp.asarray(h0)
+    ys = []
+    for t in range(S):
+        yt, h = rglru_step(jnp.asarray(x[:, t]), jnp.asarray(r[:, t]),
+                           jnp.asarray(i[:, t]), jnp.asarray(log_a), h)
+        ys.append(np.asarray(yt))
+    np.testing.assert_allclose(np.stack(ys, 1), y_ref, rtol=2e-4, atol=2e-4)

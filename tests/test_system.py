@@ -1,0 +1,47 @@
+"""End-to-end system tests: trainer, serving, checkpoints, dry-run.
+
+All multi-device behaviour runs in subprocesses with 8 simulated host
+devices (see testing/subproc.py for why).
+"""
+import pytest
+
+from repro.testing.subproc import run_checks
+
+
+@pytest.mark.slow
+def test_trainer_group():
+    run_checks([
+        "check_trainer_loss_decreases",
+        "check_trainer_zeropp_tracks_baseline",
+    ], n_devices=8, timeout=900)
+
+
+@pytest.mark.slow
+def test_trainer_accum():
+    run_checks(["check_trainer_grad_accumulation"], n_devices=8, timeout=900)
+
+
+@pytest.mark.slow
+def test_checkpoint_elastic():
+    run_checks(["check_checkpoint_elastic_restart"], n_devices=8,
+               timeout=900)
+
+
+@pytest.mark.slow
+def test_serve_consistency_dense():
+    run_checks(["check_serve_prefill_decode_consistency"], n_devices=4,
+               timeout=900)
+
+
+@pytest.mark.slow
+def test_serve_consistency_families():
+    run_checks([
+        "check_serve_consistency_ssm",
+        "check_serve_consistency_hybrid",
+        "check_serve_consistency_moe",
+    ], n_devices=4, timeout=1200)
+
+
+@pytest.mark.slow
+def test_dryrun_machinery():
+    run_checks(["check_dryrun_smoke_cell"], n_devices=8, timeout=900)
