@@ -1,0 +1,33 @@
+# Repo CI entry points.  Multi-device semantics run on simulated host CPU
+# devices: the pytest main process stays single-device (see
+# src/repro/launch/dryrun.py's device-count note) and the multi-device
+# checks spawn their own 8-device subprocesses via testing/subproc.py;
+# targets that exercise the mesh directly export the XLA flag themselves.
+
+PY       ?= python
+MP8       = XLA_FLAGS=--xla_force_host_platform_device_count=8
+PYPATH    = PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH}
+
+.PHONY: test test-fast bench-smoke bench
+
+# tier-1 verify (ROADMAP.md): full suite, stop on first failure
+test:
+	$(PYPATH) $(PY) -m pytest -x -q
+
+# skip the slow multi-device subprocess groups
+test-fast:
+	$(PYPATH) $(PY) -m pytest -x -q -m "not slow"
+
+# overlap benchmark + suite smoke in one command: verifies the prefetched
+# schedule from compiled HLO on the 8-device CPU mesh, then prints the
+# overlap-aware throughput projection (paper Table 2 analogue)
+bench-smoke:
+	$(MP8) $(PYPATH) $(PY) -c "\
+	from repro.testing.checks import check_prefetch_overlap_fraction; \
+	check_prefetch_overlap_fraction(); \
+	print('overlap verified: prefetch=1 overlappable, prefetch=0 exposed')"
+	$(PYPATH) $(PY) benchmarks/throughput_model.py
+
+# full benchmark battery (paper tables/figures)
+bench:
+	$(PYPATH) $(PY) -m benchmarks.run

@@ -28,11 +28,11 @@ from repro.optim.schedule import warmup_cosine
 from repro.train import trainer as trainer_lib
 from repro.train.policy import make_policy
 from repro.train.trainer import init_state, place_batch
+from repro.core.compat import make_mesh
 
 STEPS = int(os.environ.get("CONV_STEPS", "40"))
 arch = get_config("gpt-350m").reduced()
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((4, 2), ("data", "model"))
 lm = SyntheticLM(vocab=arch.vocab, seq_len=64, seed=11)
 out = {"entropy_bound": lm.entropy_bound}
 for name, variant, overrides in [

@@ -19,12 +19,12 @@ from repro.models.model import Model
 from repro.optim.adamw import AdamWConfig
 from repro.train import trainer
 from repro.train.policy import make_policy
+from repro.core.compat import make_mesh
 
 
 def main():
     # 1. mesh: 'data' = slow tier, 'model' = fast tier (paper's intra-node)
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((4, 2), ("data", "model"))
 
     # 2. architecture + ZeRO++ policy (qwZ INT8 + hpZ + qgZ INT4 by default)
     arch = get_config("gpt-350m").reduced()

@@ -26,6 +26,7 @@ from repro.models.model import Model
 from repro.train import serve
 from repro.train.policy import make_policy
 from repro.train.trainer import param_specs
+from repro.core.compat import make_mesh
 
 
 def main():
@@ -35,8 +36,7 @@ def main():
     ap.add_argument("--gen", type=int, default=8)
     args = ap.parse_args()
 
-    mesh = jax.make_mesh((2, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 2), ("data", "model"))
     arch = get_config(args.arch).reduced()
     pol = make_policy(arch, mesh.axis_names)
     model = Model(arch, pol.zcfg, world=4)

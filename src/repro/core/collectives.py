@@ -33,6 +33,7 @@ from repro.core.quant import (
 # hot-path quantization goes through the kernel dispatcher: Pallas kernels on
 # TPU (incl. the fused reorder+quant and dequant-reduce-quant of paper §4.2),
 # bit-identical pure-jnp on CPU.
+from repro.core.compat import axis_size as _axis_size
 from repro.kernels.ops import (
     dequant_reduce,
     dequant_reduce_quant,
@@ -52,7 +53,7 @@ def _axes_tuple(axes: Axes) -> Tuple[str, ...]:
 def axis_size(axes: Axes) -> int:
     n = 1
     for a in _axes_tuple(axes):
-        n *= lax.axis_size(a)
+        n *= _axis_size(a)
     return n
 
 
@@ -142,7 +143,7 @@ def flat_rank(axes: Axes) -> Array:
     """This device's rank within the flattened (row-major) axis group."""
     rank = jnp.int32(0)
     for a in _axes_tuple(axes):
-        rank = rank * lax.axis_size(a) + lax.axis_index(a)
+        rank = rank * _axis_size(a) + lax.axis_index(a)
     return rank
 
 
@@ -221,7 +222,7 @@ def qgz_reduce_scatter(
     (not averaged) over the world.
     """
     inter_axes = _axes_tuple(inter_axes) if inter_axes else ()
-    X = lax.axis_size(intra_axis)
+    X = _axis_size(intra_axis)
     Y = axis_size(inter_axes) if inter_axes else 1
     world = X * Y
     n = grad.shape[0]
@@ -283,6 +284,10 @@ def qgz_reduce_scatter_1hop(
     """
     world = axis_size(axes)
     n = grad.shape[0]
+    if n % (world * cfg.block_size):
+        raise ValueError(
+            f"grad len {n} must be a multiple of world*block "
+            f"({world}*{cfg.block_size})")
     L = n // world
     slices = grad.reshape(world, L)
     payload, scales = _quantize_slices(slices, cfg, key)
@@ -313,7 +318,7 @@ def qgz_quantized_ring_reduce_scatter(
     # flatten multi-axis rank
     rank = jnp.int32(0)
     for a in axes_t:
-        rank = rank * lax.axis_size(a) + lax.axis_index(a)
+        rank = rank * _axis_size(a) + lax.axis_index(a)
 
     def hop(i, acc):
         # acc: fp32 (L,) partial sum for slice s_r(i) = (rank - 1 - i) mod W;

@@ -1,0 +1,82 @@
+"""jax version compatibility shims.
+
+The repo targets the modern ``jax.shard_map`` / ``jax.make_mesh(...,
+axis_types=...)`` API surface, but must also run on jax 0.4.x where
+
+  * ``shard_map`` lives in ``jax.experimental.shard_map`` and spells the
+    replication-check knob ``check_rep`` instead of ``check_vma``;
+  * ``jax.make_mesh`` exists but takes no ``axis_types`` argument (and
+    ``jax.sharding.AxisType`` does not exist at all).
+
+Everything in the repo imports these two names from here instead of from
+``jax`` directly.  The shims are pass-throughs on new jax.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax import lax
+
+__all__ = ["shard_map", "make_mesh", "axis_size", "auto_axis_types"]
+
+
+if hasattr(lax, "axis_size"):
+    axis_size = lax.axis_size
+else:
+    def axis_size(name) -> int:
+        """``lax.axis_size`` fallback: on jax 0.4.x the static size of a
+        named mesh axis comes from the axis environment frame."""
+        from jax._src import core as _core
+        frame = _core.axis_frame(name)
+        return int(getattr(frame, "size", frame))
+
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_exp
+
+    def shard_map(f=None, /, *, mesh, in_specs, out_specs, **kw):
+        """``jax.shard_map`` fallback for jax 0.4.x.
+
+        Maps the new ``check_vma`` kwarg onto the old ``check_rep`` and
+        drops kwargs the old implementation does not know.
+        """
+        if "check_vma" in kw:
+            kw.setdefault("check_rep", kw.pop("check_vma"))
+        kw = {k: v for k, v in kw.items() if k in ("check_rep", "auto")}
+
+        def wrap(fn):
+            return _shard_map_exp(fn, mesh=mesh, in_specs=in_specs,
+                                  out_specs=out_specs, **kw)
+
+        return wrap if f is None else wrap(f)
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
+              devices=None, axis_types: Optional[Tuple] = None):
+    """``jax.make_mesh`` that tolerates old jax (no ``axis_types`` kwarg).
+
+    ``axis_types`` entries, when supported, should be built via
+    :func:`auto_axis_types` so callers never touch ``jax.sharding.AxisType``
+    directly.
+    """
+    kw = {}
+    if devices is not None:
+        kw["devices"] = devices
+    if axis_types is None:
+        axis_types = auto_axis_types(len(axis_shapes))  # default: Auto
+    if axis_types is not None and hasattr(jax.sharding, "AxisType"):
+        kw["axis_types"] = axis_types
+    try:
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kw)
+    except TypeError:  # very old signature: positional only, no axis_types
+        kw.pop("axis_types", None)
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kw)
+
+
+def auto_axis_types(n: int):
+    """``(AxisType.Auto,) * n`` on new jax, None on old jax."""
+    at = getattr(jax.sharding, "AxisType", None)
+    return (at.Auto,) * n if at is not None else None

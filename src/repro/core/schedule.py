@@ -1,0 +1,298 @@
+"""Prefetched, double-buffered layer schedule for the ZeRO++ engine.
+
+:func:`repro.core.zeropp.zero_apply` runs every collective synchronously on
+the critical path: gather layer *i*, compute layer *i*, gather layer *i+1*,
+... — the "no overlap" worst case that ``benchmarks/throughput_model.py``
+models.  The paper's throughput numbers assume the DeepSpeed schedule where
+the next layer's all-gather is in flight *under* the current layer's
+compute.  This module is that schedule, expressed as a double-buffered
+``lax.scan`` (see DESIGN.md §3 for the buffer lifetimes):
+
+  forward   carry holds layer *i*'s gathered (qwZ-dequantized) weights; the
+            body issues layer *i+1*'s gather BEFORE computing layer *i*, so
+            the two are data-independent inside one loop iteration and
+            XLA's latency-hiding scheduler can run the gather asynchronously
+            under the matmuls.
+  backward  the reverse scan prefetches layer *i-1*'s hpZ (fast-tier)
+            gather under layer *i*'s recompute+vjp, and carries layer
+            *i+1*'s unreduced gradient so its qgZ reduce-scatter also runs
+            under layer *i*'s compute (one step behind — the gradient
+            "bucket" of the DeepSpeed engine).
+
+``optimization_barrier`` discipline: each iteration ends by pinning the
+(compute result, prefetched weights[, pipelined gradient]) tuple TOGETHER.
+The joint barrier forces all of them to complete inside the iteration (XLA
+cannot sink the collective into the next iteration or resurrect it at its
+use site) while leaving them mutually independent — exactly the structure
+the latency-hiding scheduler needs to emit async-start early and
+async-done late.  Nothing creates a dependency *between* the collective
+and the compute; that would serialize them and reproduce the synchronous
+schedule with extra steps.
+
+``ZeroConfig.prefetch = 0`` selects the synchronous reference schedule
+(a scan over per-layer :func:`zero_apply`), kept as the bit-exact baseline:
+both schedules issue identical collectives in identical per-layer order,
+so losses match exactly (tests/test_schedule.py proves it).
+
+Cost of the uniform scan body: the forward issues one wasted gather (the
+last iteration prefetches layer 0 again, result discarded) and the
+backward one dummy reduce-scatter (of zeros) and one wasted fast-tier
+gather — O(1/n_layers) extra wire bytes, all of it off the critical path.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import collectives as cl
+from repro.core.zeropp import ZeroConfig, fwd_gather, grad_reduce, zero_apply
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# pytree helpers: cotangents for mixed float/int trees
+# ---------------------------------------------------------------------------
+
+def _is_float(x) -> bool:
+    return jnp.issubdtype(jnp.result_type(x), jnp.inexact)
+
+
+def _split_floats(tree):
+    """Partition a pytree into (float leaves, int leaves); each side keeps
+    the full tree structure with ``None`` in the other side's positions."""
+    floats = jax.tree.map(lambda x: x if _is_float(x) else None, tree)
+    ints = jax.tree.map(lambda x: None if _is_float(x) else x, tree)
+    return floats, ints
+
+
+def _merge(floats, ints):
+    """Inverse of :func:`_split_floats`."""
+    f_leaves, treedef = jax.tree.flatten(floats, is_leaf=lambda x: x is None)
+    i_leaves, _ = jax.tree.flatten(ints, is_leaf=lambda x: x is None)
+    return jax.tree.unflatten(
+        treedef, [f if f is not None else i
+                  for f, i in zip(f_leaves, i_leaves)])
+
+
+def _float0_like(x, extra_leading: Tuple[int, ...] = ()):
+    """The cotangent jax expects for a non-differentiable (integer) leaf."""
+    return np.zeros(extra_leading + tuple(x.shape), jax.dtypes.float0)
+
+
+def _int_cotangents(tree, extra_leading: Tuple[int, ...] = ()):
+    return jax.tree.map(lambda x: _float0_like(x, extra_leading), tree)
+
+
+# ---------------------------------------------------------------------------
+# backward-pass gather (hpZ fast tier, or the paper's second global gather)
+# ---------------------------------------------------------------------------
+
+def _bwd_gather(shard: Array, z: ZeroConfig) -> Array:
+    if z.hpz:
+        return cl.hpz_all_gather(shard, z.secondary_axes)
+    return fwd_gather(shard, z)
+
+
+def _bwd_src(stacked: Array, res_ws, z: ZeroConfig):
+    """Per-layer shard stack the backward gathers from: the secondary
+    (intra-node) shards saved by the forward when hpZ is on, else the
+    primary shards themselves (the paper's second global gather)."""
+    return res_ws if z.hpz else stacked
+
+
+# ---------------------------------------------------------------------------
+# the prefetched scan primitive
+# ---------------------------------------------------------------------------
+
+def zero_apply_scan(f: Callable, z: ZeroConfig):
+    """Scan ``f`` over stacked per-layer primary shards, ZeRO++ style.
+
+    ``f(W_full, h, x, *bargs) -> (h_next, y)`` where
+
+      * ``W_full``  — the layer's gathered full weights (flat),
+      * ``h``       — the scan carry (activations),
+      * ``x``       — this layer's slice of the per-layer inputs pytree
+                      ``xs`` (pass ``xs=None`` when there are none),
+      * ``bargs``   — broadcast (layer-invariant) arrays, e.g. rope tables,
+      * ``y``       — per-layer output, stacked into ``ys``.
+
+    Returns ``run(stacked, h0, xs, *bargs) -> (h_final, ys)``,
+    differentiable w.r.t. ``stacked``, ``h0``, and every float leaf of
+    ``xs``/``bargs``.  ``f`` is recomputed in the backward pass (activation
+    checkpointing), exactly like :func:`zero_apply`.
+
+    ``z.prefetch >= 1`` uses the double-buffered schedule; ``0`` (or a
+    single-layer stack, or local mode) the synchronous reference.  Both
+    produce bit-identical outputs.
+    """
+
+    def run_sync(stacked, h0, xs, *bargs):
+        ap = zero_apply(lambda W, h, x, *b: f(W, h, x, *b), z)
+
+        def body(h, sx):
+            p, x = sx
+            h2, y = ap(p, h, x, *bargs)
+            return h2, y
+
+        return lax.scan(body, h0, (stacked, xs))
+
+    def run_prefetch(stacked, h0, xs, *bargs):
+        return _prefetched(f, z)(stacked, h0, xs, tuple(bargs))
+
+    def run(stacked, h0, xs, *bargs):
+        n = stacked.shape[0]
+        if not z.distributed or z.prefetch < 1 or n < 2:
+            return run_sync(stacked, h0, xs, *bargs)
+        return run_prefetch(stacked, h0, xs, *bargs)
+
+    return run
+
+
+def _prefetched(f: Callable, z: ZeroConfig):
+    """The double-buffered custom_vjp core (distributed, n >= 2)."""
+
+    @jax.custom_vjp
+    def scanned(stacked, h0, xs, bargs):
+        out, _ = scanned_fwd(stacked, h0, xs, bargs)
+        return out
+
+    def scanned_fwd(stacked, h0, xs, bargs):
+        n = stacked.shape[0]
+        W0 = fwd_gather(stacked[0], z)
+
+        def body(carry, sx):
+            h, W = carry
+            i, x = sx
+            # prefetch layer i+1's gather FIRST: the jaxpr issues it before
+            # this layer's matmuls, and nothing makes the compute depend on
+            # it.  The last iteration re-gathers layer 0 (discarded).
+            p_next = lax.dynamic_index_in_dim(
+                stacked, jnp.remainder(i + 1, n), axis=0, keepdims=False)
+            W_next = fwd_gather(p_next, z)
+            h2, y = f(W, h, x, *bargs)
+            if z.hpz:
+                # re-partition the gathered weights into this device's
+                # secondary shard: zero extra communication (paper §3.2.1)
+                res_w = cl.slice_secondary(W, z.secondary_axes)
+            else:
+                res_w = jnp.zeros((0,), W.dtype)  # bwd re-gathers primary
+            # joint pin: gather and compute both finish inside this
+            # iteration but stay mutually independent (overlappable)
+            h2, W_next = lax.optimization_barrier((h2, W_next))
+            return (h2, W_next), (y, res_w, h)
+
+        (h_final, _), (ys, res_ws, h_ins) = lax.scan(
+            body, (h0, W0), (jnp.arange(n, dtype=jnp.int32), xs))
+        return (h_final, ys), (stacked, res_ws, h_ins, xs, bargs)
+
+    def scanned_bwd(res, ct):
+        stacked, res_ws, h_ins, xs, bargs = res
+        ct_h, ct_ys = ct
+        n = stacked.shape[0]
+        src = _bwd_src(stacked, res_ws, z)
+
+        xs_f, xs_i = _split_floats(xs)
+        bargs_f, bargs_i = _split_floats(bargs)
+
+        def f_flt(W, h, x_f, b_f, x_i):
+            return f(W, h, _merge(x_f, x_i), *_merge(b_f, bargs_i))
+
+        W_last = _bwd_gather(src[n - 1], z)
+        zero_b = jax.tree.map(
+            lambda v: jnp.zeros(v.shape, v.dtype), bargs_f)
+        # dW of layer i+1 rides the carry: its reduce-scatter runs inside
+        # layer i's iteration, overlapped with the recompute+vjp.  The
+        # first (i = n-1) iteration reduces zeros (discarded).
+        dW0 = jnp.zeros((stacked.shape[1] * cl.axis_size(z.dp_axes),),
+                        jnp.float32)
+
+        def body(carry, sx):
+            g_h, W, dW_pend, bg = carry
+            i, x_f, x_i, h_in, ct_y = sx
+            # 1. reduce the PREVIOUS layer's gradient   [no dep on 3.]
+            dprev = grad_reduce(dW_pend, z)
+            # 2. prefetch layer i-1's backward gather   [no dep on 3.]
+            p_prev = jax.tree.map(
+                lambda s: lax.dynamic_index_in_dim(
+                    s, jnp.remainder(i - 1, n), axis=0, keepdims=False),
+                src)
+            W_prev = _bwd_gather(p_prev, z)
+            # 3. recompute layer i and differentiate (remat)
+            _, vjp_fn = jax.vjp(
+                lambda w, hh, xf, bf: f_flt(w, hh, xf, bf, x_i),
+                W, h_in, x_f, bargs_f)
+            dW, dh, dx_f, db_f = vjp_fn((g_h, ct_y))
+            bg = jax.tree.map(jnp.add, bg, db_f)
+            dWflat = dW.reshape(-1).astype(jnp.float32)
+            # joint pin: collectives (1., 2.) and compute (3.) all complete
+            # inside this iteration, mutually independent
+            dh, W_prev, dWflat, dprev = lax.optimization_barrier(
+                (dh, W_prev, dWflat, dprev))
+            return (dh, W_prev, dWflat, bg), (dprev, dx_f)
+
+        (dh0, _, dW_first, bg), (dprevs, dxs_f) = lax.scan(
+            body,
+            (ct_h, W_last, dW0, zero_b),
+            (jnp.arange(n, dtype=jnp.int32), xs_f, xs_i, h_ins, ct_ys),
+            reverse=True)
+        # dprevs[i] is layer i+1's reduced gradient (slot n-1 is the dummy
+        # zero-reduce); layer 0's gradient leaves the scan in the carry.
+        dprim0 = grad_reduce(dW_first, z)
+        dstacked = jnp.concatenate(
+            [dprim0[None].astype(dprevs.dtype), dprevs[:-1]], axis=0)
+        dxs = _merge(dxs_f, _int_cotangents(xs_i, (n,)))
+        dbargs = _merge(bg, _int_cotangents(bargs_i))
+        return dstacked, dh0, dxs, dbargs
+
+    def fwd(stacked, h0, xs, bargs):
+        return scanned_fwd(stacked, h0, xs, bargs)
+
+    scanned.defvjp(fwd, scanned_bwd)
+    return scanned
+
+
+# ---------------------------------------------------------------------------
+# inference variant (no gradient machinery)
+# ---------------------------------------------------------------------------
+
+def zero_scan_inference(f: Callable, z: ZeroConfig):
+    """Serving-path prefetched scan: same forward schedule as
+    :func:`zero_apply_scan`, no residuals, no vjp.
+
+    ``f(W_full, h, x, *bargs) -> (h_next, y)``; returns
+    ``run(stacked, h0, xs, *bargs) -> (h_final, ys)``.
+    """
+
+    def run(stacked, h0, xs, *bargs):
+        n = stacked.shape[0]
+        if not z.distributed or z.prefetch < 1 or n < 2:
+            def body_sync(h, sx):
+                p, x = sx
+                W = fwd_gather(p, z) if z.distributed \
+                    else p.astype(z.compute_dtype)
+                return f(W, h, x, *bargs)
+
+            return lax.scan(body_sync, h0, (stacked, xs))
+
+        W0 = fwd_gather(stacked[0], z)
+
+        def body(carry, sx):
+            h, W = carry
+            i, x = sx
+            p_next = lax.dynamic_index_in_dim(
+                stacked, jnp.remainder(i + 1, n), axis=0, keepdims=False)
+            W_next = fwd_gather(p_next, z)
+            h2, y = f(W, h, x, *bargs)
+            h2, W_next = lax.optimization_barrier((h2, W_next))
+            return (h2, W_next), y
+
+        (h_final, _), ys = lax.scan(
+            body, (h0, W0), (jnp.arange(n, dtype=jnp.int32), xs))
+        return h_final, ys
+
+    return run

@@ -70,6 +70,12 @@ class ZeroConfig:
     # mesh mapping
     dp_axes: Tuple[str, ...] = ("data", "model")  # full ZeRO world
     intra_axis: str = "model"  # fast tier: hpZ secondary group, qgZ intra hop
+    # schedule (core/schedule.py): layers of weight-gather lookahead in the
+    # block scans.  1 = double-buffered prefetch (gathers/reduces overlap
+    # the neighbouring layer's compute); 0 = fully synchronous collectives
+    # on the critical path (the baseline this repo started from).  Both
+    # schedules are bit-exact in loss; only the overlap structure differs.
+    prefetch: int = 1
     # numerics
     param_dtype: jnp.dtype = jnp.bfloat16
     compute_dtype: jnp.dtype = jnp.bfloat16

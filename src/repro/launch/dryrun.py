@@ -412,6 +412,7 @@ def analyze(lowered, info: Dict[str, Any], multi_pod: bool) -> Dict[str, Any]:
     except Exception as e:  # pragma: no cover
         cost["error"] = repr(e)
 
+    hlo_text = compiled.as_text()   # serialize once: reused below
     ja = info.get("jaxpr_analysis")
     if ja:
         cost["flops"] = ja["flops"]               # per-device, true dtypes
@@ -419,12 +420,19 @@ def analyze(lowered, info: Dict[str, Any], multi_pod: bool) -> Dict[str, Any]:
         coll = ja["collectives"]
     else:  # fallback: loop-aware HLO parse (bf16 counted as f32 on CPU)
         from repro.launch.hlo_analysis import analyze_hlo
-        hlo = analyze_hlo(compiled.as_text(), world, multi_pod)
+        hlo = analyze_hlo(hlo_text, world, multi_pod)
         cost["flops"] = hlo["flops"]
         cost["bytes_accessed"] = hlo["hbm_bytes"]
         coll = hlo["collectives"]
     info["cost"] = cost
     info["collectives"] = coll
+
+    # ---- schedule overlap (prefetch verification, see hlo_analysis) -------
+    from repro.launch.hlo_analysis import analyze_overlap
+    try:
+        info["overlap"] = analyze_overlap(hlo_text)
+    except Exception as e:  # pragma: no cover
+        info["overlap"] = {"error": repr(e)}
     info.pop("jaxpr_analysis", None)  # folded into cost/collectives/memory
 
     # ---- roofline --------------------------------------------------------
@@ -577,6 +585,11 @@ def main():
     print(f"  useful_flops_ratio={r['useful_flops_ratio']:.3f} "
           f"mfu_bound={r['mfu_bound']:.3f} "
           f"compile={info.get('compile_s')}s")
+    ov = info.get("overlap", {})
+    if "overlap_fraction" in ov:
+        print(f"  overlap: fraction={ov['overlap_fraction']:.3f} "
+              f"({ov['overlappable_collectives']}/{ov['in_loop_collectives']}"
+              f" in-loop collectives; async pairs={ov['async_pairs']})")
 
 
 if __name__ == "__main__":

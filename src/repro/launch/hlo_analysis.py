@@ -453,3 +453,212 @@ def estimate_peak_bytes(text: str) -> float:
     if entry is None:
         entry = max(comps, key=lambda k: len(comps[k]))
     return _comp_peak(comps, entry, {})
+
+
+# ---------------------------------------------------------------------------
+# communication/compute overlap detection (prefetched schedule verification)
+# ---------------------------------------------------------------------------
+#
+# Two complementary detections, because backends differ in what the compiled
+# HLO shows:
+#
+#  * async pairs — GPU/TPU latency-hiding schedulers rewrite collectives
+#    into ``all-gather-start``/``all-gather-done`` (or ``async-start`` /
+#    ``async-done``) pairs and hoist the start above independent compute.
+#    A pair with a dot scheduled between start and done IS overlap,
+#    directly observable.
+#  * dependence analysis — the CPU backend (and any backend before the LHS
+#    pass) keeps collectives synchronous in the HLO text, so overlap has to
+#    be read off the *structure*: inside a while (scan) body, a collective
+#    that neither consumes this iteration's matmul results nor feeds them
+#    is schedulable concurrently with the body's compute.  That is exactly
+#    what the prefetched schedule produces (gathers feed only the loop
+#    carry; the pipelined reduce-scatter consumes only the carry), and what
+#    the synchronous schedule cannot (its gathers feed the dots directly).
+#
+# ``overlap_fraction`` is the wire-byte-weighted share of in-loop
+# collectives that are overlappable; async pairs, when present, are
+# reported alongside.
+
+
+def _fusion_has_dot(comps, name: str, memo: Dict[str, bool],
+                    visiting: Optional[set] = None) -> bool:
+    if name in memo:
+        return memo[name]
+    visiting = set() if visiting is None else visiting
+    if name in visiting:   # cycle (malformed HLO): unresolved, don't cache
+        return False
+    visiting.add(name)
+    res = False
+    for ins in comps.get(name, []):
+        if ins.opcode in ("dot", "convolution"):
+            res = True
+            break
+        if ins.opcode == "fusion":
+            tgt = _attr_comp(ins.line, "calls")
+            if tgt and _fusion_has_dot(comps, tgt, memo, visiting):
+                res = True
+                break
+    visiting.discard(name)
+    memo[name] = res
+    return res
+
+
+def _is_compute(comps, ins: Instr, memo: Dict[str, bool]) -> bool:
+    """Does this instruction perform matmul work (directly or via fusion)?"""
+    if ins.opcode in ("dot", "convolution"):
+        return True
+    if ins.opcode == "fusion":
+        tgt = _attr_comp(ins.line, "calls")
+        return bool(tgt) and _fusion_has_dot(comps, tgt, memo)
+    return False
+
+
+def _body_overlap(comps, body: str, fus_memo: Dict[str, bool]
+                  ) -> List[Dict]:
+    """Classify each collective in one while body as overlappable or
+    exposed, by within-iteration dependence on matmul compute."""
+    instrs = comps.get(body, [])
+    by_name = {i.name: i for i in instrs}
+    users: Dict[str, List[str]] = {}
+    for ins in instrs:
+        for o in ins.operands:
+            users.setdefault(o, []).append(ins.name)
+
+    def reaches_compute_down(name: str) -> bool:
+        seen, stack = set(), [name]
+        while stack:
+            cur = stack.pop()
+            for u in users.get(cur, []):
+                if u in seen:
+                    continue
+                seen.add(u)
+                ins = by_name.get(u)
+                if ins is None:
+                    continue
+                if _is_compute(comps, ins, fus_memo):
+                    return True
+                stack.append(u)
+        return False
+
+    def derives_from_compute_up(name: str) -> bool:
+        seen, stack = set(), [name]
+        while stack:
+            cur = stack.pop()
+            ins = by_name.get(cur)
+            if ins is None:
+                continue
+            for o in ins.operands:
+                if o in seen:
+                    continue
+                seen.add(o)
+                oi = by_name.get(o)
+                if oi is None:
+                    continue
+                if _is_compute(comps, oi, fus_memo):
+                    return True
+                stack.append(o)
+        return False
+
+    out = []
+    shapes = {i.name: i.type_str for i in instrs}
+    for ins in instrs:
+        base = ins.opcode.replace("-start", "")
+        if base not in _COLL_OPS or ins.opcode.endswith("-done"):
+            continue
+        in_b = sum(_type_bytes(shapes.get(o, "")) for o in ins.operands)
+        out_b = _type_bytes(ins.type_str)
+        groups = _parse_groups(ins.line)
+        n = groups.shape[1] if groups is not None else 0
+        wire = _wire_bytes(base, in_b, out_b, n) if n else float(in_b)
+        overlappable = (not reaches_compute_down(ins.name)
+                        and not derives_from_compute_up(ins.name))
+        out.append({"op": base, "name": ins.name, "wire_bytes": wire,
+                    "overlappable": overlappable})
+    return out
+
+
+def _async_pairs(comps, fus_memo: Dict[str, bool]) -> Tuple[int, int]:
+    """(n_async_collective_pairs, n_pairs_enclosing_compute) across all
+    computations — textual program order between start and done."""
+    pairs = enclosing = 0
+    for name, instrs in comps.items():
+        pos = {i.name: k for k, i in enumerate(instrs)}
+        for ins in instrs:
+            op = ins.opcode
+            base = op.replace("-start", "")
+            is_coll_start = op.endswith("-start") and base in _COLL_OPS
+            if not (is_coll_start or op == "async-start"):
+                continue
+            # find the matching done: the (unique) *-done/async-done user
+            done_idx = None
+            for other in instrs:
+                if ins.name in other.operands and (
+                        other.opcode.endswith("-done")):
+                    done_idx = pos[other.name]
+                    break
+            if done_idx is None:
+                continue
+            pairs += 1
+            lo = pos[ins.name]
+            if any(_is_compute(comps, instrs[k], fus_memo)
+                   for k in range(lo + 1, done_idx)):
+                enclosing += 1
+    return pairs, enclosing
+
+
+def analyze_overlap(text: str) -> Dict:
+    """Overlap metrics for a compiled HLO module (see block comment above).
+
+    Returns:
+      in_loop_wire_bytes      — Σ wire bytes of collectives in while bodies
+                                (× trip count)
+      overlapped_wire_bytes   — the overlappable subset
+      overlap_fraction        — overlapped / in_loop (0.0 when no in-loop
+                                collectives)
+      per_loop                — per while-body breakdown
+      async_pairs / async_pairs_enclosing_compute — LHS-scheduler evidence,
+                                when the backend emits async collectives
+    """
+    comps = parse_module(text)
+    fus_memo: Dict[str, bool] = {}
+    per_loop = {}
+    total = overlapped = 0.0
+    n_coll = n_over = 0
+    for name, instrs in comps.items():
+        for ins in instrs:
+            if ins.opcode != "while":
+                continue
+            body = _attr_comp(ins.line, "body")
+            cond = _attr_comp(ins.line, "condition")
+            if not body or body in per_loop:
+                continue
+            trips = _trip_count(comps, cond) if cond else 1
+            colls = _body_overlap(comps, body, fus_memo)
+            if not colls:
+                continue
+            wire = sum(c["wire_bytes"] for c in colls) * trips
+            over = sum(c["wire_bytes"] for c in colls
+                       if c["overlappable"]) * trips
+            per_loop[body] = {
+                "trip_count": trips,
+                "collectives": len(colls),
+                "overlappable": sum(c["overlappable"] for c in colls),
+                "wire_bytes": wire,
+                "overlapped_wire_bytes": over,
+            }
+            total += wire
+            overlapped += over
+            n_coll += len(colls)
+            n_over += sum(c["overlappable"] for c in colls)
+    pairs, enclosing = _async_pairs(comps, fus_memo)
+    return {
+        "in_loop_wire_bytes": total,
+        "overlapped_wire_bytes": overlapped,
+        "overlap_fraction": (overlapped / total) if total else 0.0,
+        "in_loop_collectives": n_coll,
+        "overlappable_collectives": n_over,
+        "per_loop": per_loop,
+        "async_pairs": pairs,
+        "async_pairs_enclosing_compute": enclosing,
+    }

@@ -16,6 +16,8 @@ from typing import Tuple
 
 import jax
 
+from repro.core.compat import auto_axis_types, make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips).
@@ -33,8 +35,8 @@ def make_production_mesh(*, multi_pod: bool = False):
     devs = jax.devices()
     if len(devs) > n:
         devs = devs[:n]
-    return jax.make_mesh(shape, axes, devices=devs,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, devices=devs,
+                     axis_types=auto_axis_types(len(axes)))
 
 
 def make_test_mesh(shape: Tuple[int, ...] = None, axes: Tuple[str, ...] = None):
@@ -47,8 +49,7 @@ def make_test_mesh(shape: Tuple[int, ...] = None, axes: Tuple[str, ...] = None):
             shape, axes = (n // 2, 2), ("data", "model")
         else:
             shape, axes = (1, n), ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types=auto_axis_types(len(axes)))
 
 
 def mesh_axis_names(mesh) -> Tuple[str, ...]:

@@ -38,11 +38,10 @@ def build_everything(arch_name: str, mesh_shape: Tuple[int, ...],
     from repro.train import trainer as trainer_lib
     from repro.train.policy import make_policy
 
+    from repro.core.compat import auto_axis_types, make_mesh
     axes = ("data", "model") if len(mesh_shape) == 2 \
         else ("pod", "data", "model")
-    mesh = jax.make_mesh(
-        mesh_shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    mesh = make_mesh(mesh_shape, axes, axis_types=auto_axis_types(len(axes)))
     arch = get_config(arch_name)
     if reduced:
         arch = arch.reduced()
@@ -160,6 +159,11 @@ def train_loop(args) -> Dict[str, Any]:
 
 
 def main():
+    # before any jax import: let the backend's latency-hiding scheduler
+    # exploit the prefetched schedule (core/schedule.py, launch/xla_flags.py)
+    from repro.launch.xla_flags import enable_overlap_flags
+    enable_overlap_flags(os.environ.get("REPRO_PLATFORM", "cpu"))
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gpt-350m")
     ap.add_argument("--reduced", action="store_true",

@@ -16,6 +16,7 @@ from typing import Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 from jax import lax
+from repro.core.compat import axis_size as _axis_size
 
 Array = jax.Array
 NEG_INF = -1e30
@@ -58,7 +59,7 @@ def seq_shard_offset(s_local: int, seq_axes: Sequence[str]) -> Array:
     """Global position of this device's first sequence element."""
     off = jnp.int32(0)
     for ax in seq_axes:
-        off = off * lax.axis_size(ax) + lax.axis_index(ax)
+        off = off * _axis_size(ax) + lax.axis_index(ax)
     return off * s_local
 
 

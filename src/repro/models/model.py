@@ -18,6 +18,7 @@ from jax import lax
 
 from repro.configs.base import ArchConfig
 from repro.core.partition import ParamSpec
+from repro.core.schedule import zero_apply_scan, zero_scan_inference
 from repro.core.zeropp import ZeroConfig, zero_apply, zero_apply_inference
 from repro.models import attention as attn_lib
 from repro.models import layers as nn
@@ -313,6 +314,9 @@ class Model:
             return h, aux
 
         if self.is_moe:
+            # MoE layers interleave routing with multiple expert-chunk
+            # gathers; the double-buffered schedule does not apply — the
+            # prefetch knob is ignored and collectives stay synchronous.
             zw = lambda f: zero_apply(f, z)
 
             def body(h, xs):
@@ -324,13 +328,11 @@ class Model:
             h, auxs = lax.scan(body, h,
                                (params["blocks"], params["experts"]))
         else:
-            ap = zero_apply(period_fn, z)
-
-            def body(h, pflat):
-                h2, aux = ap(pflat, h, cos, sin)
-                return h2, aux
-
-            h, auxs = lax.scan(body, h, params["blocks"])
+            # prefetched (z.prefetch>=1) or synchronous (0) block scan —
+            # see core/schedule.py
+            ap = zero_apply_scan(
+                lambda W, h, x, cos, sin: period_fn(W, h, cos, sin), z)
+            h, auxs = ap(params["blocks"], h, None, cos, sin)
         aux = jnp.sum(auxs)
         if self.rem_spec:
             ap_rem = zero_apply(
@@ -459,13 +461,9 @@ class Model:
             h, caches = lax.scan(body, h,
                                  (params["blocks"], params["experts"]))
         else:
-            ap = zi(period_fn)
-
-            def body(h, pflat):
-                h2, caches = ap(pflat, h)
-                return h2, caches
-
-            h, caches = lax.scan(body, h, params["blocks"])
+            ap = zero_scan_inference(
+                lambda W, h, x: period_fn(W, h), z)
+            h, caches = ap(params["blocks"], h, None)
         rem_caches = None
         if self.rem_spec:
             h, rem_caches = zi(partial(period_fn, kinds=self.period[:self.rem],
@@ -515,15 +513,9 @@ class Model:
                 body, h,
                 (params["blocks"], params["experts"], caches["blocks"]))
         else:
-            ap = zi(period_fn)
-
-            def body(h, xs):
-                pflat, cache = xs
-                h2, new = ap(pflat, h, cache)
-                return h2, new
-
-            h, new_caches = lax.scan(body, h,
-                                     (params["blocks"], caches["blocks"]))
+            ap = zero_scan_inference(
+                lambda W, h, cache: period_fn(W, h, cache), z)
+            h, new_caches = ap(params["blocks"], h, caches["blocks"])
         new_rem = None
         if self.rem_spec:
             h, new_rem = zi(partial(period_fn, kinds=self.period[:self.rem],

@@ -1,0 +1,32 @@
+"""Drop-in stand-ins for ``hypothesis`` when it is not installed.
+
+``@given(...)`` tests become pytest skips; every other test in the module
+still runs.  Strategy expressions (``st.integers(...)``) evaluate to inert
+placeholders so module-level decorators don't raise at import time.
+"""
+from __future__ import annotations
+
+import pytest
+
+
+class _Strategies:
+    def __getattr__(self, name):
+        return lambda *a, **k: None
+
+
+st = _Strategies()
+
+
+def given(*args, **kwargs):
+    def deco(fn):
+        @pytest.mark.skip(reason="property test: hypothesis not installed")
+        def _skipped():
+            pass
+        _skipped.__name__ = fn.__name__
+        _skipped.__doc__ = fn.__doc__
+        return _skipped
+    return deco
+
+
+def settings(*args, **kwargs):
+    return lambda fn: fn

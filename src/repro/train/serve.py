@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core.compat import shard_map
 from repro.models.model import Model
 from repro.models.transformer import RunSpec
 from repro.train.trainer import param_specs
@@ -99,10 +100,10 @@ def build_prefill_step(model: Model, mesh,
     def stepf(params, batch):
         return model.prefill_fn(params, batch, rs)
 
-    sm = jax.shard_map(stepf, mesh=mesh,
-                       in_specs=(p_specs, b_specs),
-                       out_specs=(logit_spec, c_specs),
-                       check_vma=False)
+    sm = shard_map(stepf, mesh=mesh,
+                   in_specs=(p_specs, b_specs),
+                   out_specs=(logit_spec, c_specs),
+                   check_vma=False)
     return ServeStep(fn=jax.jit(sm), mesh=mesh,
                      in_specs=(p_specs, b_specs),
                      out_specs=(logit_spec, c_specs), run_spec=rs)
@@ -123,10 +124,10 @@ def build_decode_step(model: Model, mesh,
     def stepf(params, caches, batch, cache_pos):
         return model.decode_fn(params, caches, batch, cache_pos, rs)
 
-    sm = jax.shard_map(stepf, mesh=mesh,
-                       in_specs=(p_specs, c_specs, b_specs, P()),
-                       out_specs=(logit_spec, c_specs),
-                       check_vma=False)
+    sm = shard_map(stepf, mesh=mesh,
+                   in_specs=(p_specs, c_specs, b_specs, P()),
+                   out_specs=(logit_spec, c_specs),
+                   check_vma=False)
     fn = jax.jit(sm, donate_argnums=(1,) if donate else ())
     return ServeStep(fn=fn, mesh=mesh,
                      in_specs=(p_specs, c_specs, b_specs, P()),

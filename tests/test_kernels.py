@@ -9,7 +9,11 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # only the @given property tests need hypothesis
+    from repro.testing.hypothesis_stub import given, settings, st
 
 from repro.core.quant import QuantConfig, dequantize_blockwise
 from repro.kernels import ref

@@ -1,0 +1,128 @@
+"""Prefetched-schedule tests (core/schedule.py + launch overlap analysis).
+
+Multi-device assertions live in repro.testing.checks and run in
+subprocesses (see testing/subproc.py); the analyze_overlap unit tests run
+in-process on synthetic HLO text.
+"""
+import pytest
+
+from repro.launch.hlo_analysis import analyze_overlap
+from repro.testing.subproc import run_checks
+
+
+@pytest.mark.slow
+def test_prefetch_loss_equality():
+    """prefetch=1 == prefetch=0 losses, bit-exact, on the smoke model."""
+    run_checks(["check_prefetch_matches_sync"], n_devices=8, timeout=900)
+
+
+@pytest.mark.slow
+def test_prefetch_jaxpr_ordering():
+    """Layer i+1's gather is issued before layer i's matmuls and is not
+    consumed by them (prefetch=1); prefetch=0 is synchronous."""
+    run_checks(["check_prefetch_jaxpr_ordering"], n_devices=8, timeout=900)
+
+
+@pytest.mark.slow
+def test_prefetch_overlap_hlo():
+    """Compiled HLO: overlap_fraction > 0 with prefetch=1, == 0 without."""
+    run_checks(["check_prefetch_overlap_fraction"], n_devices=8, timeout=900)
+
+
+@pytest.mark.slow
+def test_qgz_1hop_validates_input():
+    run_checks(["check_qgz_1hop_rejects_misaligned"], n_devices=8,
+               timeout=900)
+
+
+# ---------------------------------------------------------------------------
+# analyze_overlap unit tests (synthetic HLO, no devices)
+# ---------------------------------------------------------------------------
+
+_SYNC_HLO = """
+HloModule sync
+
+%cond (p: (s32[], f32[8], f32[64])) -> pred[] {
+  %p = (s32[], f32[8], f32[64]) parameter(0)
+  %i = s32[] get-tuple-element((s32[], f32[8], f32[64]) %p), index=0
+  %n = s32[] constant(4)
+  ROOT %lt = pred[] compare(s32[] %i, s32[] %n), direction=LT
+}
+
+%body (p: (s32[], f32[8], f32[64])) -> (s32[], f32[8], f32[64]) {
+  %p = (s32[], f32[8], f32[64]) parameter(0)
+  %i = s32[] get-tuple-element((s32[], f32[8], f32[64]) %p), index=0
+  %w = f32[8]{0} get-tuple-element((s32[], f32[8], f32[64]) %p), index=1
+  %h = f32[64]{0} get-tuple-element((s32[], f32[8], f32[64]) %p), index=2
+  %g = f32[64]{0} all-gather(f32[8]{0} %w), replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}
+  %wm = f32[8,8]{1,0} reshape(f32[64]{0} %g)
+  %hm = f32[8,8]{1,0} reshape(f32[64]{0} %h)
+  %mm = f32[8,8]{1,0} dot(f32[8,8]{1,0} %hm, f32[8,8]{1,0} %wm), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %h2 = f32[64]{0} reshape(f32[8,8]{1,0} %mm)
+  %one = s32[] constant(1)
+  %i2 = s32[] add(s32[] %i, s32[] %one)
+  ROOT %out = (s32[], f32[8], f32[64]) tuple(s32[] %i2, f32[8]{0} %w, f32[64]{0} %h2)
+}
+
+ENTRY %main (a: (s32[], f32[8], f32[64])) -> (s32[], f32[8], f32[64]) {
+  %a = (s32[], f32[8], f32[64]) parameter(0)
+  ROOT %w0 = (s32[], f32[8], f32[64]) while((s32[], f32[8], f32[64]) %a), condition=%cond, body=%body
+}
+"""
+
+# prefetched: the gather consumes a carried shard and feeds only the carry;
+# the dot consumes the PREVIOUS iteration's gathered weights (also carried)
+_PREFETCH_HLO = _SYNC_HLO.replace("HloModule sync", "HloModule prefetch") \
+    .replace(
+        "%g = f32[64]{0} all-gather(f32[8]{0} %w), "
+        "replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}\n"
+        "  %wm = f32[8,8]{1,0} reshape(f32[64]{0} %g)\n"
+        "  %hm = f32[8,8]{1,0} reshape(f32[64]{0} %h)",
+        "%g = f32[64]{0} all-gather(f32[8]{0} %w), "
+        "replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}\n"
+        "  %wm = f32[8,8]{1,0} reshape(f32[64]{0} %h)\n"
+        "  %hm = f32[8,8]{1,0} reshape(f32[64]{0} %h)") \
+    .replace(
+        "ROOT %out = (s32[], f32[8], f32[64]) tuple(s32[] %i2, "
+        "f32[8]{0} %w, f32[64]{0} %h2)",
+        "%keep = f32[8]{0} slice(f32[64]{0} %g), slice={[0:8]}\n"
+        "  ROOT %out = (s32[], f32[8], f32[64]) tuple(s32[] %i2, "
+        "f32[8]{0} %keep, f32[64]{0} %h2)")
+
+
+def test_analyze_overlap_sync_exposed():
+    ov = analyze_overlap(_SYNC_HLO)
+    assert ov["in_loop_collectives"] == 1
+    assert ov["overlappable_collectives"] == 0
+    assert ov["overlap_fraction"] == 0.0
+
+
+def test_analyze_overlap_prefetch_detected():
+    ov = analyze_overlap(_PREFETCH_HLO)
+    assert ov["in_loop_collectives"] == 1
+    assert ov["overlappable_collectives"] == 1
+    assert ov["overlap_fraction"] == 1.0
+    # trip count parsed from the loop condition constant
+    (loop,) = ov["per_loop"].values()
+    assert loop["trip_count"] == 4
+
+
+_ASYNC_HLO = """
+HloModule asyncpair
+
+ENTRY %main (w: f32[8], h: f32[8,8]) -> f32[8,8] {
+  %w = f32[8]{0} parameter(0)
+  %h = f32[8,8]{1,0} parameter(1)
+  %ags = (f32[8], f32[64]) all-gather-start(f32[8]{0} %w), replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}
+  %mm = f32[8,8]{1,0} dot(f32[8,8]{1,0} %h, f32[8,8]{1,0} %h), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %agd = f32[64]{0} all-gather-done((f32[8], f32[64]) %ags)
+  %wm = f32[8,8]{1,0} reshape(f32[64]{0} %agd)
+  ROOT %o = f32[8,8]{1,0} add(f32[8,8]{1,0} %mm, f32[8,8]{1,0} %wm)
+}
+"""
+
+
+def test_analyze_overlap_async_pairs():
+    ov = analyze_overlap(_ASYNC_HLO)
+    assert ov["async_pairs"] == 1
+    assert ov["async_pairs_enclosing_compute"] == 1
