@@ -8,7 +8,7 @@ PY       ?= python
 MP8       = XLA_FLAGS=--xla_force_host_platform_device_count=8
 PYPATH    = PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH}
 
-.PHONY: test test-fast bench-smoke bench
+.PHONY: test test-fast bench-smoke bench ckpt-smoke
 
 # tier-1 verify (ROADMAP.md): full suite, stop on first failure
 test:
@@ -17,6 +17,16 @@ test:
 # skip the slow multi-device subprocess groups
 test-fast:
 	$(PYPATH) $(PY) -m pytest -x -q -m "not slow"
+
+# checkpoint smoke: per-shard fp32 + INT8 save -> ELASTIC restore
+# (world 8 -> 4 -> 2) in an 8-device subprocess (testing/subproc.py)
+ckpt-smoke:
+	$(PYPATH) $(PY) -c "\
+	from repro.testing.subproc import run_checks; \
+	run_checks(['check_state_elastic_restore', \
+	            'check_state_quantized_roundtrip'], n_devices=8, \
+	           timeout=1200); \
+	print('ckpt smoke OK: per-shard save -> elastic restore verified')"
 
 # overlap benchmark + suite smoke in one command: verifies the prefetched
 # schedule from compiled HLO on the 8-device CPU mesh, then prints the

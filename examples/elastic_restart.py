@@ -1,10 +1,17 @@
 """Fault tolerance demo: node failure mid-run + ELASTIC restart.
 
-Phase 1 trains on an 4x2 mesh (8 devices) with periodic checkpoints and a
+All checkpoints go through the ZeroState subsystem (train/state.py):
+per-shard files + a manifest, written atomically (tmp dir + rename).
+
+Phase 1 trains on a 4x2 mesh (8 devices) with periodic checkpoints and a
 simulated node failure; the launcher restarts from the latest checkpoint.
 Phase 2 restores the same checkpoint onto a 2x2 mesh (4 devices): the flat
 ZeRO buffers re-fit onto the new world's padding and training continues —
 no layout surgery, loss picks up where it left off.
+Phase 3 switches to the INT8 block-quantized checkpoint format (~4x
+smaller on disk) and Phase 4 elastically restores THAT onto a 1x2 mesh
+(world 4 -> 2, a third padding alignment): loss continues within the
+quantization error bound.
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   PYTHONPATH=src python examples/elastic_restart.py
@@ -40,6 +47,13 @@ def main():
 
     print("\n=== phase 2: ELASTIC restore onto a 2x2 mesh (world 8 -> 4) ===")
     run(common + ["--mesh", "2x2", "--steps", "16"])
+
+    print("\n=== phase 3: INT8 block-quantized per-shard checkpoints ===")
+    run(common + ["--mesh", "2x2", "--steps", "20", "--ckpt-format", "int8"])
+
+    print("\n=== phase 4: ELASTIC restore from INT8 onto 1x2 (world 4 -> 2) "
+          "===")
+    run(common + ["--mesh", "1x2", "--steps", "22"])
 
 
 if __name__ == "__main__":

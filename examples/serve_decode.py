@@ -5,12 +5,18 @@ layer group is gathered per step with qwZ INT8 — the serving analogue of
 the paper's forward path.  The KV cache shards its sequence dim over the
 fast 'model' axis; decode uses the exact 2-pass split-KV softmax.
 
+With --from-ckpt, parameters are written through the ZeroState per-shard
+INT8 checkpoint format and loaded back via the serving path
+(state.load_serving_params: params only, bf16, no optimizer state) —
+the deployment flow for a trained model.
+
   XLA_FLAGS=--xla_force_host_platform_device_count=4 \
   PYTHONPATH=src python examples/serve_decode.py --arch qwen3-0.6b
 """
 import argparse
 import os
 import sys
+import tempfile
 
 os.environ.setdefault("XLA_FLAGS",
                       "--xla_force_host_platform_device_count=4")
@@ -25,7 +31,7 @@ from repro.configs import get_config
 from repro.models.model import Model
 from repro.train import serve
 from repro.train.policy import make_policy
-from repro.train.trainer import param_specs
+from repro.train.state import ZeroState, load_serving_params, param_specs
 from repro.core.compat import make_mesh
 
 
@@ -34,6 +40,9 @@ def main():
     ap.add_argument("--arch", default="qwen3-0.6b")
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--gen", type=int, default=8)
+    ap.add_argument("--from-ckpt", action="store_true",
+                    help="roundtrip params through an INT8 per-shard "
+                         "checkpoint and the bf16 serving load path")
     args = ap.parse_args()
 
     mesh = make_mesh((2, 2), ("data", "model"))
@@ -46,6 +55,13 @@ def main():
     p_specs = param_specs(model, tuple(mesh.axis_names))
     params = {k: jax.device_put(v, NamedSharding(mesh, p_specs[k]))
               for k, v in params.items()}
+
+    if args.from_ckpt:
+        d = tempfile.mkdtemp(prefix="zeropp_serve_ckpt_")
+        st = ZeroState(model, mesh, opt_cfg=None, params=params)
+        path = st.save(d, 0, fmt="int8")
+        params = load_serving_params(model, mesh, d, dtype=jnp.bfloat16)
+        print(f"[serve] params <- {path} (INT8 per-shard ckpt, bf16 load)")
 
     B, P, G = 2, args.prompt_len, args.gen
     cap = P + G

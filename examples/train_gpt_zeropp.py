@@ -37,6 +37,10 @@ def main():
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--tiny", action="store_true")
     ap.add_argument("--ckpt-dir", default="/tmp/zeropp_gpt100m")
+    ap.add_argument("--ckpt-format", default="fp32",
+                    choices=["fp32", "int8"],
+                    help="per-shard checkpoint payload (int8 = qwZ-style "
+                         "block-quantized, ~4x smaller)")
     args = ap.parse_args()
 
     # register the config so --arch finds it
@@ -45,6 +49,7 @@ def main():
     argv = ["--arch", "gpt-100m", "--mesh", "4x2",
             "--steps", str(args.steps), "--batch", "8", "--seq", "128",
             "--lr", "1e-3", "--ckpt-dir", args.ckpt_dir,
+            "--ckpt-format", args.ckpt_format,
             "--ckpt-every", "50", "--log-every", "10"]
     if args.tiny:
         argv += ["--reduced", "--steps", "20", "--batch", "16",

@@ -11,7 +11,7 @@ divides evenly into ``world × block`` — which simultaneously satisfies
 
 Flat 1-D global layout also makes *elastic* re-sharding trivial: a
 checkpointed global buffer re-splits onto any new world size by reshape
-(see train/checkpoint.py).
+(see train/state.py, the ZeroState subsystem).
 """
 from __future__ import annotations
 
@@ -34,8 +34,12 @@ class ParamSpec:
     entries: Tuple[Tuple[str, Tuple[int, ...]], ...]  # (name, shape)
     align: int = 1  # pad total length to a multiple of this (world*block)
 
-    @property
+    @functools.cached_property
     def offsets(self) -> Dict[str, Tuple[int, int]]:
+        # memoized: unpack/pack hit this per layer in the hot path, and
+        # entries are frozen, so the dict is built once per instance
+        # (cached_property writes the instance __dict__ directly, which
+        # frozen dataclasses allow; replace()/with_align() get fresh caches)
         off, out = 0, {}
         for name, shape in self.entries:
             n = int(np.prod(shape)) if shape else 1

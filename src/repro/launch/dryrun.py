@@ -259,6 +259,7 @@ def lower_cell(arch_name: str, shape_name: str, multi_pod: bool,
     from repro.models.model import Model
     from repro.optim.adamw import AdamWConfig
     from repro.train import serve as serve_lib
+    from repro.train import state as state_lib
     from repro.train import trainer as trainer_lib
     from repro.train.policy import make_policy
 
@@ -295,7 +296,7 @@ def lower_cell(arch_name: str, shape_name: str, multi_pod: bool,
                                           global_batch=shape.global_batch
                                           // max(accum, 1),
                                           accum=accum, attn_impl=attn_impl)
-        p_sh, o_sh = trainer_lib.state_shapes(model, opt_cfg)
+        p_sh, o_sh = state_lib.state_shapes(model, opt_cfg)
         params = _abstract(p_sh, mesh, ts.in_specs[0])
         opt = _abstract(o_sh, mesh, ts.in_specs[1])
         bsh = train_batch_shapes(model, shape)
@@ -320,8 +321,7 @@ def lower_cell(arch_name: str, shape_name: str, multi_pod: bool,
         batch_axes = tuple(a for a in axes if a != "model")
         ps = serve_lib.build_prefill_step(model, mesh, batch_axes, ("model",))
         pdt = serve_params_dtype or jnp.bfloat16
-        p_sh = {k: jax.ShapeDtypeStruct(s, pdt)
-                for k, s in model.param_shapes().items()}
+        p_sh = state_lib.abstract_params(model, pdt)
         params = _abstract(p_sh, mesh, ps.in_specs[0])
         batch = _abstract(
             serve_batch_shapes(model, shape.global_batch, shape.seq_len),
@@ -335,8 +335,7 @@ def lower_cell(arch_name: str, shape_name: str, multi_pod: bool,
         ds = serve_lib.build_decode_step(model, mesh, batch_axes, kv_axes,
                                          donate=True)
         pdt = serve_params_dtype or jnp.bfloat16
-        p_sh = {k: jax.ShapeDtypeStruct(s, pdt)
-                for k, s in model.param_shapes().items()}
+        p_sh = state_lib.abstract_params(model, pdt)
         params = _abstract(p_sh, mesh, ds.in_specs[0])
         caches = _abstract(
             model.cache_shapes(shape.global_batch, shape.seq_len),

@@ -2,10 +2,11 @@
 
 Production behaviours exercised here (and by tests/examples):
   * deterministic synthetic data pipeline (cursor == step counter)
-  * periodic atomic checkpoints of the GLOBAL flat state
+  * periodic atomic PER-SHARD checkpoints via the ZeroState subsystem
+    (train/state.py), optionally INT8 block-quantized (--ckpt-format int8)
   * restart-from-latest on failure (``--simulate-failure-at`` raises mid-run
     to prove it), including ELASTIC restart onto a different device count —
-    flat buffers re-fit onto the new world's padding (see checkpoint.fit_to)
+    flat buffers re-fit onto the new world's padding (see state.fit_to)
   * per-step metrics (loss / grad-norm / tokens/s)
 
 Run on CPU with simulated devices, e.g.:
@@ -58,58 +59,28 @@ def build_everything(arch_name: str, mesh_shape: Tuple[int, ...],
     return mesh, arch, model, opt_cfg, step, lm
 
 
-def save_ckpt(ckpt_dir: str, step_i: int, params, opt, meta: Dict):
-    from repro.train import checkpoint as ckpt
-    state = {"params": params, "opt": opt}
-    path = os.path.join(ckpt_dir, f"ckpt_{step_i}.npz")
-    return ckpt.save(path, step_i, state, meta)
+def save_ckpt(ckpt_dir: str, step_i: int, state, meta: Dict,
+              fmt: str = "fp32"):
+    """Per-shard atomic save of a :class:`repro.train.state.ZeroState`."""
+    return state.save(ckpt_dir, step_i, meta=meta, fmt=fmt)
 
 
 def restore_ckpt(ckpt_dir: str, model, mesh, opt_cfg):
     """Load latest checkpoint and re-shard onto the CURRENT mesh/model
-    (elastic: the saved world size may differ)."""
-    import jax
-    from jax.sharding import NamedSharding
-    from repro.train import checkpoint as ckpt
-    from repro.train.trainer import opt_specs, param_specs
+    (elastic: the saved world size/alignment may differ)."""
+    from repro.train.state import ZeroState
 
-    path = ckpt.latest(ckpt_dir)
-    if path is None:
+    st = ZeroState.restore(model, mesh, opt_cfg, ckpt_dir)
+    if st is None:
         return None
-    step_i, state, meta = ckpt.load(path)
-    p_specs = param_specs(model, tuple(mesh.axis_names))
-
-    want = model.param_shapes()
-
-    def refit(tree, shapes):
-        out = {}
-        for k, arr in tree.items():
-            tgt = shapes[k]
-            arr = ckpt.fit_to(arr, tgt)
-            out[k] = arr
-        return out
-
-    params = refit(state["params"], want)
-    m = refit(state["opt"]["m"], want)
-    v = refit(state["opt"]["v"], want)
-    opt = {"m": m, "v": v, "count": state["opt"]["count"]}
-
-    def put(tree, specs):
-        return {k: jax.device_put(val, NamedSharding(mesh, specs[k]))
-                for k, val in tree.items()}
-
-    params = put(params, p_specs)
-    opt = {"m": put(opt["m"], p_specs), "v": put(opt["v"], p_specs),
-           "count": jax.device_put(opt["count"], NamedSharding(
-               mesh, jax.sharding.PartitionSpec()))}
-    return step_i, params, opt, meta
+    return st.step, st.params, st.opt, st.meta
 
 
 def train_loop(args) -> Dict[str, Any]:
     import jax
     from repro.data.synthetic import make_batch
-    from repro.optim.adamw import init_opt_state
-    from repro.train.trainer import init_state, place_batch
+    from repro.train.state import ZeroState
+    from repro.train.trainer import place_batch
 
     mesh_shape = tuple(int(x) for x in args.mesh.split("x"))
     mesh, arch, model, opt_cfg, ts, lm = build_everything(
@@ -117,16 +88,17 @@ def train_loop(args) -> Dict[str, Any]:
         args.seq, args.lr, args.accum)
 
     start = 0
-    restored = None
+    st = None
     if args.ckpt_dir:
-        restored = restore_ckpt(args.ckpt_dir, model, mesh, opt_cfg)
-    if restored is not None:
-        start, params, opt, meta = restored
+        st = ZeroState.restore(model, mesh, opt_cfg, args.ckpt_dir)
+    if st is not None:
+        start = st.step
         print(f"[train] restored step {start} from {args.ckpt_dir} "
-              f"(saved world={meta.get('world')}, now={ts.world})")
+              f"(saved world={st.meta.get('world')}, now={ts.world})")
     else:
-        params, opt = init_state(model, mesh, opt_cfg,
-                                 jax.random.PRNGKey(args.seed))
+        st = ZeroState(model, mesh, opt_cfg).init(
+            jax.random.PRNGKey(args.seed))
+    params, opt = st.params, st.opt
 
     b_specs = ts.in_specs[2]
     losses = []
@@ -151,9 +123,11 @@ def train_loop(args) -> Dict[str, Any]:
                   f"tok/s {toks / max(dt, 1e-9):,.0f}")
         if args.ckpt_dir and args.ckpt_every \
                 and (i + 1) % args.ckpt_every == 0:
-            save_ckpt(args.ckpt_dir, i + 1, jax.device_get(params),
-                      jax.device_get(opt),
-                      {"world": ts.world, "arch": arch.name})
+            st.params, st.opt, st.step = params, opt, i + 1
+            save_ckpt(args.ckpt_dir, i + 1, st,
+                      {"world": ts.world, "arch": arch.name,
+                       "data_cursor": i + 1},
+                      fmt=args.ckpt_format)
     return {"losses": losses, "entropy_bound": lm.entropy_bound,
             "final_loss": losses[-1] if losses else None}
 
@@ -178,6 +152,11 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--ckpt-format", default="fp32",
+                    choices=["fp32", "int8"],
+                    help="per-shard payload: exact fp32 (default) or "
+                         "qwZ-style block-quantized INT8 + fp16 scales "
+                         "(~4x smaller)")
     ap.add_argument("--log-every", type=int, default=5)
     ap.add_argument("--simulate-failure-at", type=int, default=None)
     ap.add_argument("--max-restarts", type=int, default=2)

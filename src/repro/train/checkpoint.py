@@ -1,103 +1,40 @@
-"""Atomic, elastic checkpointing of the flat ZeRO state.
+"""Thin compat shim over the state subsystem (see train/state.py).
 
-Checkpoints store the GLOBAL flat buffers (params + optimizer + step + data
-cursor) as an npz written via tmp-file + rename (crash-safe).  Because all
-model state is flat 1-D per group, restoring onto a different device count
-is a re-pad + re-split — elastic restart needs no layout surgery.
+Checkpoint I/O is owned by ``repro.train.state``: per-shard files + a
+manifest (with an optional INT8 block-quantized payload) and elastic
+restore live there.  This module keeps the original API alive for old
+callers and tools:
+
+  * ``save``/``load`` — the legacy single-file GLOBAL npz format (every
+    buffer gathered to one host; O(model) host RAM — use
+    ``ZeroState.save``/``ZeroState.restore`` for anything past toy scale).
+  * ``latest`` — checkpoint discovery, now recognizing both the per-shard
+    manifest dirs and legacy ``.npz`` files, and skipping foreign names
+    instead of crashing on non-integer suffixes.
+  * ``fit_to`` — elastic re-pad of a flat buffer (re-exported).
 """
 from __future__ import annotations
 
-import json
-import os
-import tempfile
 from typing import Any, Dict, Optional, Tuple
 
-import jax
-import numpy as np
+from repro.train.state import (fit_to, latest_checkpoint, load_global,
+                               save_legacy_npz)
 
-_SEP = "::"
-
-
-def _flatten(tree: Any, prefix: str = "") -> Dict[str, np.ndarray]:
-    out = {}
-    if isinstance(tree, dict):
-        for k, v in tree.items():
-            key = f"{prefix}{_SEP}{k}" if prefix else str(k)
-            out.update(_flatten(v, key))
-    else:
-        out[prefix] = np.asarray(jax.device_get(tree))
-    return out
-
-
-def _unflatten(flat: Dict[str, np.ndarray]) -> Dict[str, Any]:
-    tree: Dict[str, Any] = {}
-    for key, v in flat.items():
-        parts = key.split(_SEP)
-        node = tree
-        for p in parts[:-1]:
-            node = node.setdefault(p, {})
-        node[parts[-1]] = v
-    return tree
+__all__ = ["save", "load", "latest", "fit_to"]
 
 
 def save(path: str, step: int, state: Dict[str, Any],
          meta: Optional[Dict[str, Any]] = None) -> str:
-    """Atomic save.  ``state`` is a pytree-of-dicts of (global) arrays."""
-    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    flat = _flatten(state)
-    flat["__step__"] = np.asarray(step, np.int64)
-    if meta:
-        flat["__meta__"] = np.frombuffer(
-            json.dumps(meta).encode(), dtype=np.uint8)
-    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
-                               suffix=".tmp")
-    try:
-        with os.fdopen(fd, "wb") as f:
-            np.savez(f, **flat)
-        os.replace(tmp, path)   # atomic on POSIX
-    finally:
-        if os.path.exists(tmp):
-            os.unlink(tmp)
-    return path
+    """Atomic single-file save.  ``state`` is a pytree-of-dicts of
+    (global) arrays.  Legacy format — see module docstring."""
+    return save_legacy_npz(path, step, state, meta)
 
 
 def load(path: str) -> Tuple[int, Dict[str, Any], Dict[str, Any]]:
-    with np.load(path) as z:
-        flat = {k: z[k] for k in z.files}
-    step = int(flat.pop("__step__"))
-    meta = {}
-    if "__meta__" in flat:
-        meta = json.loads(flat.pop("__meta__").tobytes().decode())
-    return step, _unflatten(flat), meta
+    """Load either format (per-shard dir or legacy npz) into GLOBAL
+    buffers; returns (step, state_tree, meta)."""
+    return load_global(path)
 
 
 def latest(directory: str, prefix: str = "ckpt_") -> Optional[str]:
-    if not os.path.isdir(directory):
-        return None
-    cands = [f for f in os.listdir(directory)
-             if f.startswith(prefix) and f.endswith(".npz")]
-    if not cands:
-        return None
-    cands.sort(key=lambda f: int(f[len(prefix):-4]))
-    return os.path.join(directory, cands[-1])
-
-
-def fit_to(arr: np.ndarray, target_shape) -> np.ndarray:
-    """Re-fit a flat (…, padded) buffer onto a different padding length.
-
-    Elastic restart: world sizes differ between save and restore, so the
-    trailing padded dim differs.  Real parameters occupy the leading
-    ``spec.size`` elements and padding is zeros, so truncating or
-    zero-extending the trailing dim is exact as long as the new padding is
-    not smaller than the logical size (guaranteed: padding >= size for any
-    world).
-    """
-    tgt = tuple(target_shape)
-    assert arr.shape[:-1] == tgt[:-1], (arr.shape, tgt)
-    cur, new = arr.shape[-1], tgt[-1]
-    if cur == new:
-        return arr
-    if cur > new:
-        return np.ascontiguousarray(arr[..., :new])
-    pad = [(0, 0)] * (arr.ndim - 1) + [(0, new - cur)]
-    return np.pad(arr, pad)
+    return latest_checkpoint(directory, prefix)

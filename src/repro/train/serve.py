@@ -26,7 +26,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.compat import shard_map
 from repro.models.model import Model
 from repro.models.transformer import RunSpec
-from repro.train.trainer import param_specs
+# specs come from the state subsystem, not the trainer: serving must not
+# depend on the training stack (see DESIGN.md §4)
+from repro.train.state import load_serving_params, param_specs  # noqa: F401
 
 Array = jax.Array
 

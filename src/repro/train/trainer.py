@@ -13,7 +13,6 @@ per-device batch the paper's regime — and metric reduction.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -25,30 +24,19 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.compat import shard_map
 from repro.models.model import Model
 from repro.models.transformer import RunSpec
-from repro.optim.adamw import AdamWConfig, apply_update, init_opt_state
+from repro.optim.adamw import AdamWConfig, apply_update
+# State specs/init/shapes are owned by the ZeroState subsystem
+# (train/state.py); re-exported here for existing callers.
+from repro.train.state import (ZeroState, opt_specs,  # noqa: F401
+                               param_specs, state_shapes)
 
 Array = jax.Array
 PyTree = Any
 
 
 # ---------------------------------------------------------------------------
-# partition specs
+# batch partition specs (model-state specs live in train/state.py)
 # ---------------------------------------------------------------------------
-
-def param_specs(model: Model, axes: Tuple[str, ...]) -> Dict[str, P]:
-    """PartitionSpecs for the global flat parameter buffers: every buffer
-    shards its trailing (flat) dim over ALL mesh axes (the ZeRO world)."""
-    out = {}
-    for name, shape in model.param_shapes().items():
-        lead = (None,) * (len(shape) - 1)
-        out[name] = P(*lead, tuple(axes))
-    return out
-
-
-def opt_specs(model: Model, axes: Tuple[str, ...]) -> Dict[str, Any]:
-    ps = param_specs(model, axes)
-    return {"m": ps, "v": ps, "count": P()}
-
 
 def batch_specs(model: Model, axes: Tuple[str, ...],
                 batch_axes: Tuple[str, ...], seq_axes: Tuple[str, ...],
@@ -198,35 +186,13 @@ def build_train_step(
 
 def init_state(model: Model, mesh, opt_cfg: AdamWConfig, key,
                ) -> Tuple[PyTree, PyTree]:
-    """Initialize (params fp32, opt) sharded over the mesh."""
-    axes = tuple(mesh.axis_names)
-    p_specs = param_specs(model, axes)
+    """Initialize (params fp32, opt) sharded over the mesh.
 
-    def mk():
-        params = model.init_params(key, dtype=jnp.float32)
-        cfg2 = dataclasses.replace(opt_cfg)
-        return params, init_opt_state(params, cfg2)
-
-    out_sh = (
-        {k: NamedSharding(mesh, s) for k, s in p_specs.items()},
-        {"m": {k: NamedSharding(mesh, s) for k, s in p_specs.items()},
-         "v": {k: NamedSharding(mesh, s) for k, s in p_specs.items()},
-         "count": NamedSharding(mesh, P())},
-    )
-    return jax.jit(mk, out_shardings=out_sh)()
-
-
-def state_shapes(model: Model, opt_cfg: AdamWConfig
-                 ) -> Tuple[PyTree, PyTree]:
-    """ShapeDtypeStructs for (params, opt) — used by the dry-run (no
-    allocation)."""
-    pshapes = {k: jax.ShapeDtypeStruct(s, jnp.float32)
-               for k, s in model.param_shapes().items()}
-    mo = {k: jax.ShapeDtypeStruct(s.shape, opt_cfg.moments_dtype)
-          for k, s in pshapes.items()}
-    opt = {"m": mo, "v": dict(mo),
-           "count": jax.ShapeDtypeStruct((), jnp.int32)}
-    return pshapes, opt
+    Thin wrapper over :meth:`repro.train.state.ZeroState.init` for callers
+    that want bare pytrees rather than the state object.
+    """
+    st = ZeroState(model, mesh, opt_cfg).init(key)
+    return st.params, st.opt
 
 
 def place_batch(batch: Dict[str, np.ndarray], mesh, b_specs) -> Dict:
