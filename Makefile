@@ -8,7 +8,7 @@ PY       ?= python
 MP8       = XLA_FLAGS=--xla_force_host_platform_device_count=8
 PYPATH    = PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH}
 
-.PHONY: test test-fast bench-smoke bench ckpt-smoke
+.PHONY: test test-fast bench-smoke bench ckpt-smoke serve-smoke
 
 # tier-1 verify (ROADMAP.md): full suite, stop on first failure
 test:
@@ -27,6 +27,17 @@ ckpt-smoke:
 	            'check_state_quantized_roundtrip'], n_devices=8, \
 	           timeout=1200); \
 	print('ckpt smoke OK: per-shard save -> elastic restore verified')"
+
+# serving smoke: continuous-batching engine end-to-end on a 4-device CPU
+# mesh — 6 requests with mixed prompt lengths over 4 slots (recycling),
+# INT8 per-shard checkpoint boot, greedy output checked bit-identical to
+# the raw single-request prefill+decode path (testing/subproc.py)
+serve-smoke:
+	$(PYPATH) $(PY) -c "\
+	from repro.testing.subproc import run_checks; \
+	run_checks(['check_serve_engine_continuous_batching'], n_devices=4, \
+	           timeout=1200); \
+	print('serve smoke OK: continuous batching == per-request decode')"
 
 # overlap benchmark + suite smoke in one command: verifies the prefetched
 # schedule from compiled HLO on the 8-device CPU mesh, then prints the

@@ -1,0 +1,118 @@
+"""Serving throughput: decode tokens/sec and time-to-first-token vs batch
+occupancy, baseline (bf16 gathers) vs qwZ (INT8 gathers).
+
+The engine's decode step is timed on the simulated 4-device CPU mesh at
+several slot occupancies (1, half, full): tokens/sec = occupied slots /
+median step wall-clock, so the plot shows how continuous batching
+amortizes the per-step weight gathers.  TTFT is one prefill + first-token
+sample at the smallest bucket.  CPU wall-clock is NOT accelerator
+wall-clock — the comparison across variants and occupancies is the
+signal, not the absolute numbers (Table-1 wire volumes + the measured
+overlap fraction in throughput_model.py project the hardware picture).
+
+Runs in a subprocess with simulated devices (see testing/subproc.py note).
+Emits a BENCH json line; ``python benchmarks/serve_bench.py`` prints a
+table.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from typing import Dict
+
+_SNIPPET = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json, time
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from repro.configs import get_config
+from repro.core.compat import make_mesh
+from repro.models.model import Model
+from repro.serve import ServeEngine
+from repro.train.policy import make_policy
+from repro.train.state import param_specs
+
+N_SLOTS, KV = 8, 64
+mesh = make_mesh((2, 2), ("data", "model"))
+arch = get_config("qwen3-0.6b").reduced()
+out = {}
+for variant in ("baseline", "qwz"):
+    pol = make_policy(arch, mesh.axis_names, variant)
+    model = Model(arch, pol.zcfg, world=4)
+    params = model.init_params(jax.random.PRNGKey(0), dtype=jnp.float32)
+    sp = param_specs(model, tuple(mesh.axis_names))
+    params = {k: jax.device_put(v, NamedSharding(mesh, sp[k]))
+              for k, v in params.items()}
+    res = {"occupancy": {}}
+    rng = np.random.default_rng(0)
+
+    # TTFT: submit one request, time until its first streamed token
+    eng = ServeEngine(model, mesh, params, n_slots=N_SLOTS, kv_len=KV)
+    first = []
+    eng.submit(rng.integers(0, arch.vocab, 8), max_new_tokens=1,
+               on_token=lambda u, t: first.append(time.perf_counter()))
+    t0 = time.perf_counter(); eng.step()       # includes prefill compile
+    eng.run(max_steps=10)
+    t0 = time.perf_counter()
+    eng.submit(rng.integers(0, arch.vocab, 8), max_new_tokens=1,
+               on_token=lambda u, t: first.append(time.perf_counter()))
+    eng.step(); eng.run(max_steps=10)
+    res["ttft_s"] = first[-1] - t0             # warm-compile TTFT
+
+    for occ in (1, N_SLOTS // 2, N_SLOTS):
+        eng = ServeEngine(model, mesh, params, n_slots=N_SLOTS, kv_len=KV)
+        for r in range(occ):
+            eng.submit(rng.integers(0, arch.vocab, 8), max_new_tokens=40)
+        eng.step()                              # admissions + compile
+        times = []
+        while not eng.done:
+            t = time.perf_counter()
+            emitted = eng.step()
+            times.append((time.perf_counter() - t, len(emitted)))
+            if len(times) >= 24:
+                break
+        times = times[2:]                       # drop warmup steps
+        med = sorted(t for t, _ in times)[len(times) // 2]
+        res["occupancy"][occ] = {"step_s": med,
+                                 "decode_tok_per_s": occ / med}
+    out[variant] = res
+print("RESULT " + json.dumps(out))
+"""
+
+
+def measure() -> Dict:
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _SNIPPET], env=env,
+                       capture_output=True, text=True, timeout=1800)
+    if r.returncode != 0:
+        raise RuntimeError(f"serve bench failed:\n{r.stdout}\n{r.stderr}")
+    for line in r.stdout.splitlines():
+        if line.startswith("RESULT "):
+            return json.loads(line[len("RESULT "):])
+    raise RuntimeError(f"no RESULT line in:\n{r.stdout}")
+
+
+def main():
+    res = measure()
+    print("BENCH " + json.dumps({"serve": res}))
+    print(f"\n{'variant':<10} {'ttft_ms':>9}  " +
+          "  ".join(f"occ={o:>2} tok/s" for o in
+                    sorted(int(k) for k in res['baseline']['occupancy'])))
+    for variant, r in res.items():
+        occ = {int(k): v for k, v in r["occupancy"].items()}
+        row = "  ".join(f"{occ[o]['decode_tok_per_s']:>12.1f}"
+                        for o in sorted(occ))
+        print(f"{variant:<10} {r['ttft_s'] * 1e3:>9.1f}  {row}")
+
+
+if __name__ == "__main__":
+    main()

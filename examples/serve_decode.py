@@ -1,17 +1,21 @@
-"""Serving example: batched prefill + autoregressive decode.
+"""Serving example: the continuous-batching engine (repro.serve).
 
-Parameters stay ZeRO-sharded (flat buffers over the whole mesh); every
-layer group is gathered per step with qwZ INT8 — the serving analogue of
-the paper's forward path.  The KV cache shards its sequence dim over the
-fast 'model' axis; decode uses the exact 2-pass split-KV softmax.
+Three requests with DIFFERENT prompt lengths run through one engine: they
+are admitted into KV-pool slots, prefilled individually (prompt-length
+buckets bound the compiled prefill shapes), and decoded TOGETHER by one
+jitted decode step with a per-sequence ``cache_pos`` vector.  Tokens
+stream per request as they are sampled.  Parameters stay ZeRO-sharded
+(flat buffers over the whole mesh); every layer group is gathered per
+step with qwZ INT8 — the serving analogue of the paper's forward path.
 
 With --from-ckpt, parameters are written through the ZeroState per-shard
-INT8 checkpoint format and loaded back via the serving path
-(state.load_serving_params: params only, bf16, no optimizer state) —
-the deployment flow for a trained model.
+INT8 checkpoint format and the engine boots from it via the bf16 serving
+load path (ServeEngine.from_checkpoint) — the deployment flow for a
+trained model.
 
   XLA_FLAGS=--xla_force_host_platform_device_count=4 \
-  PYTHONPATH=src python examples/serve_decode.py --arch qwen3-0.6b
+  PYTHONPATH=src python examples/serve_decode.py --arch qwen3-0.6b \
+      --temperature 0.8 --top-k 40 --top-p 0.95 --max-new-tokens 12
 """
 import argparse
 import os
@@ -29,20 +33,31 @@ from jax.sharding import NamedSharding
 
 from repro.configs import get_config
 from repro.models.model import Model
-from repro.train import serve
+from repro.serve import ServeEngine
 from repro.train.policy import make_policy
-from repro.train.state import ZeroState, load_serving_params, param_specs
+from repro.train.state import ZeroState, param_specs
 from repro.core.compat import make_mesh
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
-    ap.add_argument("--prompt-len", type=int, default=12)
-    ap.add_argument("--gen", type=int, default=8)
+    ap.add_argument("--prompt-lens", default="5,12,9",
+                    help="comma-separated prompt lengths (mixed in one run)")
+    ap.add_argument("--max-new-tokens", type=int, default=8)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kv-len", type=int, default=64,
+                    help="KV pool capacity per slot")
+    ap.add_argument("--slots", type=int, default=2,
+                    help="decode batch size (fewer slots than requests "
+                         "exercises slot recycling)")
     ap.add_argument("--from-ckpt", action="store_true",
                     help="roundtrip params through an INT8 per-shard "
-                         "checkpoint and the bf16 serving load path")
+                         "checkpoint and boot the engine from it")
     args = ap.parse_args()
 
     mesh = make_mesh((2, 2), ("data", "model"))
@@ -56,47 +71,44 @@ def main():
     params = {k: jax.device_put(v, NamedSharding(mesh, p_specs[k]))
               for k, v in params.items()}
 
+    kw = dict(n_slots=args.slots, kv_len=args.kv_len,
+              batch_axes=(), kv_axes=("model",))
     if args.from_ckpt:
         d = tempfile.mkdtemp(prefix="zeropp_serve_ckpt_")
-        st = ZeroState(model, mesh, opt_cfg=None, params=params)
+        st = ZeroState(model, mesh, opt_cfg=None, params=params,
+                       meta={"arch": arch.name})
         path = st.save(d, 0, fmt="int8")
-        params = load_serving_params(model, mesh, d, dtype=jnp.bfloat16)
-        print(f"[serve] params <- {path} (INT8 per-shard ckpt, bf16 load)")
+        engine = ServeEngine.from_checkpoint(model, mesh, d, **kw)
+        print(f"[serve] engine <- {path} (INT8 per-shard ckpt, bf16 load)")
+    else:
+        engine = ServeEngine(model, mesh, params, **kw)
 
-    B, P, G = 2, args.prompt_len, args.gen
-    cap = P + G
-    rng = np.random.default_rng(0)
-    toks = rng.integers(0, arch.vocab, size=(B, P)).astype(np.int32)
+    lens = [int(x) for x in args.prompt_lens.split(",")]
+    rng = np.random.default_rng(args.seed)
+    streams = {}
 
-    batch_axes, kv_axes = ("data",), ("model",)
-    ps = serve.build_prefill_step(model, mesh, batch_axes, kv_axes)
-    ds = serve.build_decode_step(model, mesh, batch_axes, kv_axes,
-                                 donate=False)
+    def on_token(uid, tok):
+        streams[uid].append(tok)
+        print(f"  [stream] req {uid}: +{tok}  ({len(streams[uid])} tokens)")
 
-    def put(d, specs):
-        return {k: jax.device_put(v, NamedSharding(mesh, specs[k]))
-                for k, v in d.items()}
+    uids = []
+    for i, P in enumerate(lens):
+        prompt = rng.integers(0, arch.vocab, P).astype(np.int32)
+        uid = engine.submit(prompt, max_new_tokens=args.max_new_tokens,
+                            temperature=args.temperature, top_k=args.top_k,
+                            top_p=args.top_p, seed=args.seed + i,
+                            on_token=on_token)
+        streams[uid] = []
+        uids.append((uid, prompt))
+        print(f"req {uid}: prompt_len={P} "
+              f"bucket={engine.scheduler.bucket_for(P)}")
 
-    logits, caches = ps.fn(params, put({"tokens": toks}, ps.in_specs[1]))
-    caches = serve.pad_prefill_caches(model, caches, cap)
-    c_specs = serve.cache_specs(model, batch_axes, kv_axes)
-    caches = jax.tree.map(
-        lambda a, s: jax.device_put(a, NamedSharding(mesh, s)), caches,
-        c_specs)
-
-    out = [toks]
-    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-    for t in range(P, cap):
-        out.append(np.asarray(tok))
-        logits, caches = ds.fn(params, caches,
-                               put({"tokens": tok}, ds.in_specs[2]),
-                               jnp.int32(t))
-        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-
-    gen = np.concatenate(out, axis=1)
-    for b in range(B):
-        print(f"seq {b}: prompt={gen[b, :P].tolist()} "
-              f"generated={gen[b, P:].tolist()}")
+    results = engine.run(max_steps=1000)
+    print(f"\n{args.slots} slots served {len(lens)} requests "
+          f"(slot map: {engine.slot_history})")
+    for uid, prompt in uids:
+        print(f"req {uid}: prompt={prompt.tolist()} "
+              f"generated={results[uid]}")
 
 
 if __name__ == "__main__":

@@ -342,7 +342,8 @@ def lower_cell(arch_name: str, shape_name: str, multi_pod: bool,
             mesh, ds.in_specs[1])
         batch = _abstract(serve_batch_shapes(model, shape.global_batch, 1),
                           mesh, ds.in_specs[2])
-        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        # per-sequence cache_pos vector (see train/serve.py)
+        pos = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
         lowered = ds.fn.lower(params, caches, batch, pos)
         info["tokens_per_step"] = shape.global_batch
         import jax as _j

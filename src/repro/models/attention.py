@@ -253,28 +253,46 @@ def _flash_bwd(scale, causal, window, softcap, kv_chunk, res, dout):
 flash_attention.defvjp(_flash_fwd, _flash_bwd)
 
 
+def per_seq_pos(cache_pos: Array, batch: int) -> Array:
+    """Normalize ``cache_pos`` to a per-sequence (B,) int32 vector.
+
+    The decode path is continuously batched: every sequence in the batch
+    may sit at a different position (see serve/engine.py).  A scalar is
+    accepted for the uniform-position case and broadcast.
+    """
+    p = jnp.asarray(cache_pos, jnp.int32)
+    if p.ndim == 0:
+        return jnp.broadcast_to(p, (batch,))
+    assert p.shape == (batch,), (p.shape, batch)
+    return p
+
+
 def decode_attend(
     q: Array,                     # (B, 1, H, hd) new-token queries
     k_cache: Array,               # (B, S_loc, K, hd) local KV-seq shard
     v_cache: Array,
-    cache_pos: Array,             # () int32: position of the newest token
+    cache_pos: Array,             # (B,) or () int32: pos of the newest token
     *,
     kv_seq_axes: Sequence[str] = (),
     softmax_scale: Optional[float] = None,
     window: int = 0,
     logit_softcap: float = 0.0,
-    slot_positions: Optional[Array] = None,  # (S_loc,) pos held by each slot
+    slot_positions: Optional[Array] = None,  # (B,S_loc) or (S_loc,) slot pos
 ) -> Array:
     """Exact split-KV decode attention (2-pass max/sum-exp combine).
 
     Each device scores its local KV shard, then the global max, normalizer
     and weighted values are combined with pmax/psum over ``kv_seq_axes``.
-    ``slot_positions`` supports ring-buffer caches (sliding-window layers):
-    slot s holds the token at that global position (may be negative = empty).
+    ``cache_pos`` is per-sequence: sequences at different positions (the
+    continuous-batching workload) share one decode step, each row masking
+    its own valid prefix.  ``slot_positions`` supports ring-buffer caches
+    (sliding-window layers): slot s holds the token at that global position
+    (may be negative = empty).
     """
     B, _, H, hd = q.shape
     S_loc, K = k_cache.shape[1], k_cache.shape[2]
     scale = softmax_scale or hd ** -0.5
+    cache_pos = per_seq_pos(cache_pos, B)
 
     rep = H // K
     kk = jnp.repeat(k_cache, rep, axis=2)  # (B, S_loc, H, hd)
@@ -288,16 +306,18 @@ def decode_attend(
         pos = seq_shard_offset(S_loc, kv_seq_axes) + jnp.arange(S_loc)
     else:
         pos = slot_positions
-    valid = (pos >= 0) & (pos <= cache_pos)
+    if pos.ndim == 1:
+        pos = pos[None, :]                             # -> (1|B, S_loc)
+    valid = (pos >= 0) & (pos <= cache_pos[:, None])   # (B, S_loc)
     if window:
-        valid &= pos > cache_pos - window
-    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+        valid &= pos > cache_pos[:, None] - window
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
 
     m = jnp.max(logits, axis=-1)                       # (B,H,1)
     if kv_seq_axes:
         m = lax.pmax(m, tuple(kv_seq_axes))
     e = jnp.exp(logits - m[..., None])
-    e = jnp.where(valid[None, None, None, :], e, 0.0)
+    e = jnp.where(valid[:, None, None, :], e, 0.0)
     denom = jnp.sum(e, axis=-1)                        # (B,H,1)
     num = jnp.einsum("bhqk,bkhd->bqhd", e.astype(q.dtype), vv)
     if kv_seq_axes:
@@ -312,18 +332,27 @@ def cache_insert(
     v_cache: Array,
     k_new: Array,                 # (B, 1, K, hd)
     v_new: Array,
-    cache_pos: Array,             # () int32 global write position
+    cache_pos: Array,             # (B,) or () int32 global write position
     kv_seq_axes: Sequence[str] = (),
 ) -> Tuple[Array, Array]:
-    """Write the new token's K/V into whichever device owns that slot."""
-    S_loc = k_cache.shape[1]
+    """Write each sequence's new K/V into whichever device owns its slot.
+
+    ``cache_pos`` is per-sequence, so every batch row writes at its own
+    slot (rows whose slot lives on another KV shard are left untouched
+    there and written by the owner).
+    """
+    B, S_loc = k_cache.shape[0], k_cache.shape[1]
     off = seq_shard_offset(S_loc, kv_seq_axes)
-    local_idx = jnp.clip(cache_pos - off, 0, S_loc - 1)
-    mine = (cache_pos >= off) & (cache_pos < off + S_loc)
+    pos = per_seq_pos(cache_pos, B)
+    local_idx = jnp.clip(pos - off, 0, S_loc - 1)
+    mine = (pos >= off) & (pos < off + S_loc)
 
     def upd(cache, new):
-        updated = lax.dynamic_update_slice_in_dim(cache, new.astype(cache.dtype),
-                                                  local_idx, axis=1)
-        return jnp.where(mine, updated, cache)
+        def one(c, n, i, m):   # c: (S_loc, K, hd), n: (1, K, hd)
+            u = lax.dynamic_update_slice_in_dim(c, n.astype(c.dtype), i,
+                                                axis=0)
+            return jnp.where(m, u, c)
+
+        return jax.vmap(one)(cache, new, local_idx, mine)
 
     return upd(k_cache, k_new), upd(v_cache, v_new)

@@ -212,7 +212,8 @@ class Model:
             cos, sin = nn.mrope_tables(pos, cfg.d_head, cfg.rope_theta)
         else:
             if rs.mode == "decode":
-                p = cache_pos[None]
+                # per-sequence positions: (B,) -> (B, 1) rope tables
+                p = cache_pos[:, None]
             else:
                 p = attn_lib.seq_shard_offset(s_local, rs.seq_axes) \
                     + jnp.arange(s_local)
@@ -427,9 +428,14 @@ class Model:
 
     # ------------------------------------------------------------ prefill
 
-    def prefill_fn(self, params, batch, rs: RunSpec
-                   ) -> Tuple[Array, Any]:
-        """Forward over a prompt; returns (last-token logits, caches)."""
+    def prefill_fn(self, params, batch, rs: RunSpec,
+                   last_pos: Optional[Array] = None) -> Tuple[Array, Any]:
+        """Forward over a prompt; returns (last-token logits, caches).
+
+        ``last_pos`` (B,) selects per-sequence logits positions — the last
+        REAL token of each (possibly right-padded) prompt.  Default: the
+        final sequence position, the unpadded behaviour.
+        """
         cfg, z = self.cfg, self.zcfg
         zi = lambda f: zero_apply_inference(f, z)
         if cfg.embed_inputs:
@@ -469,8 +475,12 @@ class Model:
             h, rem_caches = zi(partial(period_fn, kinds=self.period[:self.rem],
                                        spec=self.rem_spec))(params["rem"], h)
 
-        from repro.models.transformer import _last_shard_value
-        h_last = _last_shard_value(h[:, -1:, :], rs.seq_axes)
+        from repro.models.transformer import _last_shard_value, \
+            select_positions
+        if last_pos is None:
+            h_last = _last_shard_value(h[:, -1:, :], rs.seq_axes)
+        else:
+            h_last = select_positions(h, last_pos, rs.seq_axes)
 
         logits = self._head_logits(zi, params, h_last)
         return logits, {"blocks": caches, "rem": rem_caches}
@@ -479,7 +489,13 @@ class Model:
 
     def decode_fn(self, params, caches, batch, cache_pos: Array,
                   rs: RunSpec) -> Tuple[Array, Any]:
-        """One decode step.  batch: tokens (B,1) or embeds (B,1,d)."""
+        """One decode step.  batch: tokens (B,1) or embeds (B,1,d).
+
+        ``cache_pos`` is PER-SEQUENCE — a (B,) int32 vector (a scalar is
+        broadcast): every batch row may sit at a different position, which
+        is what lets the continuous-batching engine decode requests
+        admitted at different steps in one batch.
+        """
         cfg, z = self.cfg, self.zcfg
         zi = lambda f: zero_apply_inference(f, z)
         if cfg.embed_inputs:
@@ -487,6 +503,7 @@ class Model:
         else:
             h = zi(lambda W, t: self.embed_spec.unpack(W)["emb"][t]
                    .astype(z.compute_dtype))(params["embed"], batch["tokens"])
+        cache_pos = attn_lib.per_seq_pos(cache_pos, h.shape[0])
         pos = {"rope": self._rope_tables(batch, rs, 1, cache_pos=cache_pos),
                "cache_pos": cache_pos}
 

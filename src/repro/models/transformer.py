@@ -157,13 +157,14 @@ def _attn_block(cfg, kind, p, h, rs: RunSpec, pos, cache):
     window = cfg.window if kind == "local" else 0
     if rs.mode == "decode":
         cap_g = cache["k"].shape[1] * _axes_prod(rs.kv_axes)  # global capacity
-        t = pos["cache_pos"]
-        slot = jnp.mod(t, cap_g)
+        t = attn.per_seq_pos(pos["cache_pos"], B)        # (B,)
+        slot = jnp.mod(t, cap_g)                         # (B,)
         kc, vc = attn.cache_insert(cache["k"], cache["v"], k, v, slot,
                                    rs.kv_axes)
         off = attn.seq_shard_offset(kc.shape[1], rs.kv_axes)
-        gslot = off + jnp.arange(kc.shape[1])
-        spos = t - jnp.mod(t - gslot, cap_g)   # ring slot -> global position
+        gslot = off + jnp.arange(kc.shape[1])             # (S_loc,)
+        # ring slot -> global position, per sequence: (B, S_loc)
+        spos = t[:, None] - jnp.mod(t[:, None] - gslot[None, :], cap_g)
         o = attn.decode_attend(q, kc, vc, t, kv_seq_axes=rs.kv_axes,
                                window=window,
                                logit_softcap=cfg.logit_softcap,
@@ -288,6 +289,25 @@ def _ssd_block(cfg, p, h, rs: RunSpec, cache):
     y = y.reshape(B, S, di).astype(h.dtype)
     y = nn.rms_norm(y * jax.nn.silu(z), p["onrm"])
     return y @ p["outp"], new_cache
+
+
+def select_positions(h: Array, pos: Array, seq_axes: Sequence[str]) -> Array:
+    """Per-sequence select: h[b, pos[b], :] under sequence sharding.
+
+    h: (B, S_loc, d), pos: (B,) GLOBAL positions.  Each device one-hot
+    reduces its local shard (exact: the sum touches one 1.0 and zeros) and
+    the owner's value is psum-combined.  Returns (B, 1, d).  Prefill uses
+    this to read last-REAL-token logits from right-padded prompts
+    (serve/engine.py buckets prompt lengths, so S may exceed the prompt).
+    """
+    B, S_loc, _ = h.shape
+    off = attn.seq_shard_offset(S_loc, seq_axes)
+    idx = pos - off                                   # (B,) local index
+    oh = (jnp.arange(S_loc)[None, :] == idx[:, None]).astype(h.dtype)
+    v = jnp.einsum("bs,bsd->bd", oh, h)[:, None, :]
+    if seq_axes:
+        v = lax.psum(v, tuple(seq_axes))
+    return v
 
 
 def _last_shard_value(x: Array, seq_axes: Sequence[str]) -> Array:

@@ -1,0 +1,12 @@
+"""repro.serve — continuous-batching inference engine (DESIGN.md §5).
+
+Layering: the engine owns slots and scheduling, ``steps`` (over
+train/serve.py) owns the shard_map step builders and sharding specs,
+ZeroState (train/state.py) owns parameters.
+"""
+from repro.serve.engine import ServeEngine                      # noqa: F401
+from repro.serve.kv_pool import KVPool                          # noqa: F401
+from repro.serve.sampling import (sample_logits, top_k_mask,    # noqa: F401
+                                  top_p_mask)
+from repro.serve.scheduler import FIFOScheduler, Request        # noqa: F401
+from repro.serve import steps                                   # noqa: F401

@@ -1,0 +1,240 @@
+"""Continuous-batching inference engine.
+
+The drive loop turns the shard_map step builders (``repro.serve.steps``)
+into a serving engine: requests are admitted whenever the KV pool has a
+free slot, prefilled into that slot, then decoded TOGETHER with every
+other in-flight request by ONE jitted decode step — the per-sequence
+``cache_pos`` contract (DESIGN.md §5) lets rows sit at different
+positions.  Retired slots recycle to queued requests, so the decode batch
+stays occupied under sustained traffic.
+
+Step anatomy (``ServeEngine.step``):
+
+  1. admit    — FIFO scheduler pops requests while slots are free; each
+                prompt is padded to its length bucket (pure-attention
+                models; others prefill at exact length), prefilled with
+                batch=1, and its caches inserted into the pool slot.  The
+                prefill's per-sequence ``last_pos`` logits give the first
+                generated token (streamed immediately: time-to-first-token
+                is one prefill, never a decode-batch wait).
+  2. decode   — one batched step over ALL slots: tokens (n_slots, 1),
+                cache_pos (n_slots,).  Inactive slots decode a dummy token
+                at position 0 of their own slot; admission overwrites the
+                whole slot, so garbage never leaks across requests.
+  3. retire   — EOS / max-new-tokens / KV-capacity exhaustion free the
+                slot for the next admission.
+
+Weights stay ZeRO-sharded across the whole mesh and move through the same
+qwZ INT8 block-quantized all-gather as training's forward (paper §
+quantized weight communication) — ``from_checkpoint`` boots from the
+per-shard INT8 checkpoint format (ZeroState) via the bf16 serving path.
+
+Greedy decoding through the engine is bit-identical to running each
+request alone through the raw prefill+decode steps: per-row ops (matmuls,
+norms, attention with per-row masks) do not mix batch rows, and the qwZ
+weight gathers are batch-independent (tests/test_serve_engine.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro.serve import steps
+from repro.serve.kv_pool import KVPool
+from repro.serve.sampling import SamplerCache, request_key, token_key
+from repro.serve.scheduler import FIFOScheduler, Request
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class _Active:
+    """One in-flight request: ``pos`` is the cache position of the last
+    sampled (not yet cache-written) token — the next decode's cache_pos."""
+    req: Request
+    slot: int
+    pos: int
+    n_gen: int
+    last_token: int
+    key: Array
+
+
+class ServeEngine:
+    def __init__(self, model, mesh, params: Dict[str, Array], *,
+                 n_slots: int, kv_len: int,
+                 batch_axes: Tuple[str, ...] = (),
+                 kv_axes: Tuple[str, ...] = ("model",),
+                 scheduler: Optional[FIFOScheduler] = None,
+                 cache_dtype=None, donate: bool = True):
+        cfg = model.cfg
+        if cfg.embed_inputs or cfg.mrope:
+            raise ValueError(
+                "ServeEngine drives token-in models; embed/M-RoPE frontends "
+                "need their own input pipeline")
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        b_world = 1
+        for a in batch_axes:
+            b_world *= sizes[a]
+        if n_slots % max(b_world, 1):
+            raise ValueError(f"n_slots={n_slots} must divide over batch "
+                             f"axes {batch_axes} (world {b_world})")
+        if "local" in model.period and kv_len < cfg.window:
+            raise ValueError(
+                f"kv_len={kv_len} below the sliding window {cfg.window}: "
+                f"ring caches from prefill would not fit the pool")
+        self.model = model
+        self.mesh = mesh
+        self.params = params
+        self.n_slots = n_slots
+        self.kv_len = kv_len
+        self.pool = KVPool(model, mesh, n_slots, kv_len,
+                           batch_axes=batch_axes, kv_axes=kv_axes,
+                           dtype=cache_dtype or model.zcfg.compute_dtype)
+        self.scheduler = scheduler if scheduler is not None \
+            else FIFOScheduler(kv_len=kv_len)
+        # prompts right-padded to buckets are exact only when every layer
+        # masks by position (full attention): recurrent/ring/MoE states
+        # would absorb the pad tokens, so those prefill at exact length
+        self._pad_ok = set(model.period) == {"attn"}
+        # prefill: batch=1 per request (jit recompiles per bucket length);
+        # decode: ONE compiled step for the whole pool, any occupancy
+        self._prefill = steps.build_prefill_step(model, mesh, (), (),
+                                                 with_last_pos=True)
+        self._decode = steps.build_decode_step(model, mesh, batch_axes,
+                                               kv_axes, donate=donate)
+        self._samplers = SamplerCache()
+        self.slots: List[Optional[_Active]] = [None] * n_slots
+        self.results: Dict[int, List[int]] = {}
+        self.slot_history: Dict[int, int] = {}   # uid -> slot (tests)
+
+    # ------------------------------------------------------------- boot
+
+    @classmethod
+    def from_checkpoint(cls, model, mesh, ckpt: str, *,
+                        dtype=jnp.bfloat16, **kw) -> "ServeEngine":
+        """Boot from a ZeroState checkpoint (per-shard fp32 or INT8) via
+        the params-only bf16 serving load path."""
+        from repro.train.state import load_serving_params
+        params = load_serving_params(model, mesh, ckpt, dtype=dtype,
+                                     expect_arch=model.cfg.name)
+        return cls(model, mesh, params, **kw)
+
+    # ---------------------------------------------------------- requests
+
+    def submit(self, prompt, **kw) -> int:
+        """Queue a request; returns its uid.  Keyword args mirror
+        ``scheduler.Request`` (max_new_tokens, temperature, top_k, top_p,
+        seed, eos_id, on_token)."""
+        req = Request(prompt=np.asarray(prompt, np.int32), **kw)
+        uid = self.scheduler.submit(req)
+        self.results[uid] = []
+        return uid
+
+    @property
+    def n_active(self) -> int:
+        return sum(a is not None for a in self.slots)
+
+    @property
+    def done(self) -> bool:
+        return not self.n_active and not len(self.scheduler)
+
+    # ------------------------------------------------------------- steps
+
+    def _put(self, tree, specs):
+        return {k: jax.device_put(v, NamedSharding(self.mesh, specs[k]))
+                for k, v in tree.items()}
+
+    def _sample(self, req: Request, logits_row, key) -> int:
+        fn = self._samplers((req.temperature, req.top_k, req.top_p))
+        return int(fn(jnp.asarray(logits_row), key))
+
+    def _emit(self, a: _Active, token: int) -> None:
+        self.results[a.req.uid].append(token)
+        if a.req.on_token is not None:
+            a.req.on_token(a.req.uid, token)
+
+    def _finished(self, a: _Active, token: int) -> bool:
+        if a.req.eos_id is not None and token == a.req.eos_id:
+            return True
+        if a.n_gen >= a.req.max_new_tokens:
+            return True
+        return a.pos >= self.kv_len              # no slot left to write to
+
+    def _retire(self, a: _Active) -> None:
+        self.slots[a.slot] = None
+        self.pool.free(a.slot)
+
+    def _admit(self, emitted: List[Tuple[int, int]]) -> None:
+        for req, bucket in self.scheduler.admit(self.pool.n_free):
+            slot = self.pool.alloc()
+            assert slot is not None
+            P = len(req.prompt)
+            Lp = bucket if self._pad_ok else P
+            toks = np.zeros((1, Lp), np.int32)
+            toks[0, :P] = req.prompt
+            batch = self._put({"tokens": toks}, self._prefill.in_specs[1])
+            logits, caches = self._prefill.fn(
+                self.params, batch, jnp.full((1,), P - 1, jnp.int32))
+            self.pool.write_prefill(slot, caches, P)
+            self.slot_history[req.uid] = slot
+            key = request_key(req.seed)
+            tok = self._sample(req, logits[0, 0], token_key(key, 0))
+            a = _Active(req=req, slot=slot, pos=P, n_gen=1,
+                        last_token=tok, key=key)
+            self._emit(a, tok)
+            emitted.append((req.uid, tok))
+            if self._finished(a, tok):
+                self._retire(a)
+            else:
+                self.slots[slot] = a
+
+    def step(self) -> List[Tuple[int, int]]:
+        """One engine iteration: admit waiting requests, then one batched
+        decode over every occupied slot.  Returns the (uid, token) pairs
+        emitted this step, in slot order."""
+        emitted: List[Tuple[int, int]] = []
+        self._admit(emitted)
+        active = [a for a in self.slots if a is not None]
+        if not active:
+            return emitted
+        tokens = np.zeros((self.n_slots, 1), np.int32)
+        pos = np.zeros((self.n_slots,), np.int32)
+        for a in active:
+            tokens[a.slot, 0] = a.last_token
+            pos[a.slot] = a.pos
+        batch = self._put({"tokens": tokens}, self._decode.in_specs[2])
+        pos_dev = jax.device_put(
+            pos, NamedSharding(self.mesh, self._decode.in_specs[3]))
+        logits, self.pool.caches = self._decode.fn(
+            self.params, self.pool.caches, batch, pos_dev)
+        for a in active:
+            # device-side row slice: no full-batch host copy + re-upload
+            tok = self._sample(a.req, logits[a.slot, 0],
+                               token_key(a.key, a.n_gen))
+            a.n_gen += 1
+            a.pos += 1
+            self.pool.lengths[a.slot] += 1
+            a.last_token = tok
+            self._emit(a, tok)
+            emitted.append((a.req.uid, tok))
+            if self._finished(a, tok):
+                self._retire(a)
+        return emitted
+
+    def run(self, max_steps: Optional[int] = None) -> Dict[int, List[int]]:
+        """Drive until every submitted request retires; returns
+        uid -> generated tokens (EOS included when hit)."""
+        n = 0
+        while not self.done:
+            self.step()
+            n += 1
+            if max_steps is not None and n >= max_steps and not self.done:
+                raise RuntimeError(
+                    f"engine did not drain in {max_steps} steps "
+                    f"({self.n_active} active, {len(self.scheduler)} queued)")
+        return self.results

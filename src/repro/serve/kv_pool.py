@@ -1,0 +1,102 @@
+"""Slot-based KV cache pool: fixed capacity, per-slot lengths, recycling.
+
+The pool owns ONE cache pytree of batch size ``n_slots`` (the decode
+batch), laid out exactly like ``Model.cache_shapes`` and sharded with
+``steps.cache_specs``.  A request occupies one slot for its lifetime:
+
+  admit  -> ``alloc()`` hands out the oldest retired slot (FIFO recycling)
+  prefill-> ``write_prefill`` inserts the request's padded prefill caches
+            at the slot's batch index via ``jax.lax.dynamic_update_slice``
+            under ONE jitted writer (the slot index is traced, so one
+            compile serves every slot)
+  decode -> the engine's jitted decode step updates all slots in place
+            (per-sequence cache_pos; inactive slots write their own slot's
+            position 0, which the next prefill overwrites)
+  retire -> ``free()`` zeroes the slot's length and recycles it
+
+Host-side metadata (free list, per-slot lengths) never enters jit.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Any, Deque, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import NamedSharding
+
+from repro.serve import steps
+
+Array = jax.Array
+
+
+class KVPool:
+    def __init__(self, model, mesh, n_slots: int, kv_len: int,
+                 batch_axes: Tuple[str, ...] = (),
+                 kv_axes: Tuple[str, ...] = ("model",),
+                 dtype=jnp.bfloat16):
+        self.model = model
+        self.mesh = mesh
+        self.n_slots = n_slots
+        self.kv_len = kv_len
+        self.specs = steps.cache_specs(model, batch_axes, kv_axes)
+        caches = model.init_caches(n_slots, kv_len, dtype)
+        self.caches = jax.tree.map(
+            lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
+            caches, self.specs)
+        self.lengths = np.zeros(n_slots, np.int32)   # valid tokens per slot
+        self._free: Deque[int] = deque(range(n_slots))
+        self._writer = jax.jit(self._write_tree, donate_argnums=(0,))
+
+    # ------------------------------------------------------------ slots
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self) -> Optional[int]:
+        """Oldest retired slot first — recycling is FIFO, so freed slots
+        are provably reused (tests assert this)."""
+        return self._free.popleft() if self._free else None
+
+    def free(self, slot: int) -> None:
+        assert 0 <= slot < self.n_slots and slot not in self._free
+        self.lengths[slot] = 0
+        self._free.append(slot)
+
+    # ------------------------------------------------------------ writes
+
+    def _write_tree(self, pool, new, slot):
+        """Insert a batch=1 cache tree at batch index ``slot``.
+
+        Stacked block caches carry (n_periods, B, ...) so the batch axis is
+        1; the remainder group is unstacked, batch axis 0.
+        """
+        def ins(pl, nl, b_ax):
+            starts = [jnp.int32(0)] * pl.ndim
+            starts[b_ax] = jnp.asarray(slot, jnp.int32)
+            return lax.dynamic_update_slice(pl, nl.astype(pl.dtype), starts)
+
+        blocks = tuple(
+            jax.tree.map(lambda p, n: ins(p, n, 1), pb, nb)
+            for pb, nb in zip(pool["blocks"], new["blocks"]))
+        rem = None
+        if pool.get("rem") is not None:
+            rem = tuple(
+                jax.tree.map(lambda p, n: ins(p, n, 0), pr, nr)
+                for pr, nr in zip(pool["rem"], new["rem"]))
+        return {"blocks": blocks, "rem": rem}
+
+    def write_prefill(self, slot: int, prefill_caches: Any,
+                      prompt_len: int) -> None:
+        """Grow a request's prefill caches to pool capacity and insert them
+        at ``slot``.  The insert covers the FULL slot (zero-padded beyond
+        the prefill length), so a recycled slot can never leak its previous
+        occupant; the zero region stays masked (decode's validity test is
+        pos <= cache_pos) until the decode loop overwrites it."""
+        grown = steps.pad_prefill_caches(self.model, prefill_caches,
+                                         self.kv_len)
+        self.caches = self._writer(self.caches, grown, slot)
+        self.lengths[slot] = prompt_len

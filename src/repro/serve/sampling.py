@@ -1,0 +1,92 @@
+"""Token sampling: temperature / top-k / top-p with per-request seeds.
+
+Pure functions over a trailing vocab axis, plus a small compiled-sampler
+cache keyed on the (temperature, top_k, top_p) triple — requests sharing
+sampling parameters share one compiled sampler, and greedy requests
+(temperature == 0) compile to a bare argmax.
+
+Seed discipline: every request owns a PRNGKey derived from its integer
+seed; the key for the n-th generated token is ``fold_in(key, n)``, so a
+request's stream is reproducible regardless of which other requests share
+its decode batches.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def top_k_mask(logits: Array, k: int) -> Array:
+    """Boolean mask keeping EXACTLY the k largest entries of the last axis
+    (ties broken by index order, matching ``lax.top_k``)."""
+    V = logits.shape[-1]
+    if k <= 0 or k >= V:
+        return jnp.ones(logits.shape, bool)
+    flat = logits.reshape(-1, V)
+    _, idx = jax.lax.top_k(flat, k)                    # (N, k)
+    rows = jnp.arange(flat.shape[0])[:, None]
+    mask = jnp.zeros(flat.shape, bool).at[rows, idx].set(True)
+    return mask.reshape(logits.shape)
+
+
+def top_p_mask(logits: Array, p: float) -> Array:
+    """Nucleus mask: the smallest prefix of probability-sorted tokens whose
+    cumulative probability reaches ``p`` (the argmax is always kept)."""
+    V = logits.shape[-1]
+    if p >= 1.0:
+        return jnp.ones(logits.shape, bool)
+    flat = logits.reshape(-1, V).astype(jnp.float32)
+    order = jnp.argsort(-flat, axis=-1)                # descending
+    srt = jnp.take_along_axis(flat, order, axis=-1)
+    probs = jax.nn.softmax(srt, axis=-1)
+    csum = jnp.cumsum(probs, axis=-1)
+    # token i stays while the mass BEFORE it is < p; the first always stays
+    keep_sorted = (csum - probs) < p
+    rows = jnp.arange(flat.shape[0])[:, None]
+    mask = jnp.zeros(flat.shape, bool).at[rows, order].set(keep_sorted)
+    return mask.reshape(logits.shape)
+
+
+def sample_logits(logits: Array, key: Array, temperature: float = 0.0,
+                  top_k: int = 0, top_p: float = 1.0) -> Array:
+    """Sample token ids from (..., V) logits.  temperature == 0 is greedy
+    argmax (the key is unused); otherwise top-k, then top-p, then a
+    categorical draw at the given temperature."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    l = logits.astype(jnp.float32) / temperature
+    if top_k:
+        l = jnp.where(top_k_mask(l, top_k), l, NEG_INF)
+    if top_p < 1.0:
+        l = jnp.where(top_p_mask(l, top_p), l, NEG_INF)
+    return jax.random.categorical(key, l, axis=-1).astype(jnp.int32)
+
+
+class SamplerCache:
+    """One jitted sampler per distinct (temperature, top_k, top_p)."""
+
+    def __init__(self):
+        self._fns = {}
+
+    def __call__(self, params: Tuple[float, int, float]):
+        fn = self._fns.get(params)
+        if fn is None:
+            t, k, p = params
+            fn = jax.jit(partial(sample_logits, temperature=t, top_k=k,
+                                 top_p=p))
+            self._fns[params] = fn
+        return fn
+
+
+def request_key(seed: int) -> Array:
+    return jax.random.PRNGKey(seed)
+
+
+def token_key(key: Array, n_generated: int) -> Array:
+    return jax.random.fold_in(key, n_generated)

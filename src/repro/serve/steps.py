@@ -1,0 +1,18 @@
+"""Step-builder layer of the serving stack (re-export of train/serve).
+
+The engine consumes prefill/decode steps and cache specs from here;
+``repro.train.serve`` remains the implementation (shard_map step builders
+over the ZeRO-sharded parameter layout — with qwZ the per-layer weight
+gathers move INT8).  See DESIGN.md §5 for the ownership split: the engine
+owns slots and scheduling, this layer owns step/sharding specs, ZeroState
+owns parameters.
+"""
+from repro.train.serve import (  # noqa: F401
+    ServeStep,
+    build_decode_step,
+    build_prefill_step,
+    cache_specs,
+    pad_prefill_caches,
+    serve_batch_specs,
+    serve_shape_policy,
+)

@@ -86,11 +86,15 @@ class ServeStep:
 
 def build_prefill_step(model: Model, mesh,
                        batch_axes: Tuple[str, ...],
-                       seq_axes: Tuple[str, ...]) -> ServeStep:
+                       seq_axes: Tuple[str, ...],
+                       with_last_pos: bool = False) -> ServeStep:
     """Prompt ingestion: (params, batch) -> (last-token logits, caches).
 
     The prefill KV cache inherits the activation layout, so kv_axes ==
-    seq_axes by construction.
+    seq_axes by construction.  With ``with_last_pos`` the step takes an
+    extra (B,) int32 argument selecting each sequence's logits position —
+    the last REAL token of a right-padded prompt (continuous-batching
+    engine, prompt-length buckets).
     """
     rs = RunSpec(mode="prefill", seq_axes=tuple(seq_axes),
                  kv_axes=tuple(seq_axes))
@@ -99,15 +103,21 @@ def build_prefill_step(model: Model, mesh,
     c_specs = cache_specs(model, batch_axes, seq_axes)
     logit_spec = P(_opt(batch_axes), None, None)
 
-    def stepf(params, batch):
-        return model.prefill_fn(params, batch, rs)
+    if with_last_pos:
+        def stepf(params, batch, last_pos):
+            return model.prefill_fn(params, batch, rs, last_pos=last_pos)
+        in_specs = (p_specs, b_specs, P(_opt(batch_axes)))
+    else:
+        def stepf(params, batch):
+            return model.prefill_fn(params, batch, rs)
+        in_specs = (p_specs, b_specs)
 
     sm = shard_map(stepf, mesh=mesh,
-                   in_specs=(p_specs, b_specs),
+                   in_specs=in_specs,
                    out_specs=(logit_spec, c_specs),
                    check_vma=False)
     return ServeStep(fn=jax.jit(sm), mesh=mesh,
-                     in_specs=(p_specs, b_specs),
+                     in_specs=in_specs,
                      out_specs=(logit_spec, c_specs), run_spec=rs)
 
 
@@ -116,23 +126,30 @@ def build_decode_step(model: Model, mesh,
                       kv_axes: Tuple[str, ...],
                       donate: bool = True) -> ServeStep:
     """One-token decode: (params, caches, batch, cache_pos) ->
-    (logits, new caches)."""
+    (logits, new caches).
+
+    ``cache_pos`` is a PER-SEQUENCE (B,) int32 vector, batch-sharded like
+    the activations: each row of the batch decodes at its own position, so
+    one compiled step serves any mix of in-flight requests (the
+    continuous-batching contract, DESIGN.md §5).
+    """
     rs = RunSpec(mode="decode", kv_axes=tuple(kv_axes))
     p_specs = param_specs(model, tuple(mesh.axis_names))
     b_specs = serve_batch_specs(model, batch_axes, ())
     c_specs = cache_specs(model, batch_axes, kv_axes)
     logit_spec = P(_opt(batch_axes), None, None)
+    pos_spec = P(_opt(batch_axes))
 
     def stepf(params, caches, batch, cache_pos):
         return model.decode_fn(params, caches, batch, cache_pos, rs)
 
     sm = shard_map(stepf, mesh=mesh,
-                   in_specs=(p_specs, c_specs, b_specs, P()),
+                   in_specs=(p_specs, c_specs, b_specs, pos_spec),
                    out_specs=(logit_spec, c_specs),
                    check_vma=False)
     fn = jax.jit(sm, donate_argnums=(1,) if donate else ())
     return ServeStep(fn=fn, mesh=mesh,
-                     in_specs=(p_specs, c_specs, b_specs, P()),
+                     in_specs=(p_specs, c_specs, b_specs, pos_spec),
                      out_specs=(logit_spec, c_specs), run_spec=rs)
 
 
@@ -172,9 +189,34 @@ def pad_prefill_caches(model: Model, caches, kv_len: int):
 
 def serve_shape_policy(shape_name: str, mesh_axes: Tuple[str, ...]
                        ) -> Tuple[Tuple[str, ...], Tuple[str, ...]]:
-    """(batch_axes, kv_axes) for a named inference shape."""
+    """(batch_axes, kv_axes) for a named inference shape.
+
+    Validates both inputs instead of silently falling through to the
+    default layout: the shape must be a known *serving* shape from
+    ``configs.base.SHAPES`` and the mesh must carry the fast ``model``
+    axis the KV layout is keyed on.
+    """
+    from repro.configs.base import SHAPES
+
+    serving = {n for n, s in SHAPES.items() if s.kind in ("prefill",
+                                                          "decode")}
+    if shape_name not in SHAPES:
+        raise ValueError(
+            f"unknown inference shape {shape_name!r}; known serving shapes: "
+            f"{sorted(serving)}")
+    if shape_name not in serving:
+        raise ValueError(
+            f"shape {shape_name!r} is a {SHAPES[shape_name].kind} shape, "
+            f"not a serving one; expected one of {sorted(serving)}")
+    axes = tuple(mesh_axes)
+    if len(set(axes)) != len(axes):
+        raise ValueError(f"duplicate mesh axis names: {axes}")
+    if "model" not in axes:
+        raise ValueError(
+            f"serving layouts shard the KV cache over the fast 'model' "
+            f"axis (DESIGN.md §2), absent from mesh axes {axes}")
     fast = ("model",)
-    slow = tuple(a for a in mesh_axes if a != "model")
+    slow = tuple(a for a in axes if a != "model")
     if shape_name == "long_500k":
-        return (), tuple(mesh_axes)      # B=1: shard the cache everywhere
+        return (), axes                  # B=1: shard the cache everywhere
     return slow, fast

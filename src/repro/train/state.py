@@ -692,14 +692,27 @@ class ZeroState:
 # ---------------------------------------------------------------------------
 
 def load_serving_params(model, mesh, ckpt: str,
-                        dtype=jnp.bfloat16) -> Dict[str, Array]:
+                        dtype=jnp.bfloat16,
+                        expect_arch: Optional[str] = None
+                        ) -> Dict[str, Array]:
     """Params-only load for the serving stack: elastic re-fit onto
     (model, mesh), cast to ``dtype`` (bf16 default — serving never needs
-    the fp32 master or the optimizer moments), sharded placement."""
+    the fp32 master or the optimizer moments), sharded placement.
+
+    ``expect_arch`` guards engine boots: if the checkpoint's meta records
+    an architecture name and it differs, fail loudly instead of fitting a
+    foreign model's buffers into this one's layout (``fit_to`` would
+    silently truncate/zero-extend them)."""
     path = ZeroState._resolve(ckpt)
     if path is None:
         raise FileNotFoundError(f"no checkpoint under {ckpt!r}")
-    _, tree, _ = load_global(path, prefix="params")
+    _, tree, meta = load_global(path, prefix="params")
+    ck_arch = (meta or {}).get("arch")
+    if expect_arch is not None and ck_arch is not None \
+            and ck_arch != expect_arch:
+        raise ValueError(
+            f"checkpoint {path!r} was written for arch {ck_arch!r}, "
+            f"engine expects {expect_arch!r}")
     want = model.param_shapes()
     shardings = {k: NamedSharding(mesh, s)
                  for k, s in param_specs(model, tuple(mesh.axis_names)).items()}
