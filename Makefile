@@ -8,7 +8,7 @@ PY       ?= python
 MP8       = XLA_FLAGS=--xla_force_host_platform_device_count=8
 PYPATH    = PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH}
 
-.PHONY: test test-fast bench-smoke bench ckpt-smoke serve-smoke
+.PHONY: test test-fast bench-smoke bench ckpt-smoke serve-smoke moe-smoke
 
 # tier-1 verify (ROADMAP.md): full suite, stop on first failure
 test:
@@ -38,6 +38,17 @@ serve-smoke:
 	run_checks(['check_serve_engine_continuous_batching'], n_devices=4, \
 	           timeout=1200); \
 	print('serve smoke OK: continuous batching == per-request decode')"
+
+# MoE overlap smoke: tiny deepseek-style MoE stack (shared + routed
+# experts, chunked) with prefetch=1 — the layer-scan shared gathers and
+# the nested expert-chunk gathers/reduces must be schedulable under
+# compute (overlap_fraction > 0.5 from compiled HLO; 0.0 synchronous)
+moe-smoke:
+	$(PYPATH) $(PY) -c "\
+	from repro.testing.subproc import run_checks; \
+	run_checks(['check_moe_prefetch_overlap_fraction'], n_devices=8, \
+	           timeout=1200); \
+	print('moe smoke OK: chunk/layer MoE schedule overlap verified from HLO')"
 
 # overlap benchmark + suite smoke in one command: verifies the prefetched
 # schedule from compiled HLO on the 8-device CPU mesh, then prints the

@@ -40,6 +40,14 @@ SLOW_BWS = {f"{n}IB": n * 12.5e9 for n in (1, 2, 4, 8)}
 # Reproduce with: make bench-smoke (or checks.check_prefetch_overlap_fraction)
 MEASURED_OVERLAP = 0.89
 
+# same measurement for the MoE chunk/layer schedule (deepseek-moe-16b
+# reduced, zeropp, prefetch=1): the layer scan's shared-param gathers, the
+# nested expert-chunk gathers and the pipelined reduces are overlappable;
+# exposed remainder = the gather-only expert re-gather loop the nested
+# remat leaves in backward, plus the streaming-LSE unembedding.
+# Reproduce with: make moe-smoke (checks.check_moe_prefetch_overlap_fraction)
+MEASURED_MOE_OVERLAP = 0.63
+
 
 def comm_bytes_per_step(n_params: int, variant: str) -> Dict[str, float]:
     """Slow/fast-tier wire bytes for one step (M = 2·n_params bf16 bytes).
@@ -85,6 +93,63 @@ def model_tflops(n_params: int, tokens_dev: int, t: float) -> float:
     return 6.0 * n_params * tokens_dev / t / 1e12
 
 
+# ---------------------------------------------------------------------------
+# MoE step-time model (the chunk/layer prefetched expert path)
+# ---------------------------------------------------------------------------
+#
+# ZeRO gathers are parameter-complete: the expert stack moves ALL E experts'
+# weights per layer even though each token's FLOPs touch only top_k of them.
+# Compute therefore scales with ACTIVE params while communication scales
+# with TOTAL params — the worst communication-per-FLOP regime, and exactly
+# where hiding the wire bytes behind compute pays most.  The chunk/layer
+# schedule (core/schedule.py) costs one extra forward-tier expert re-gather
+# in backward (the chunk pipeline is nested inside the layer engine's
+# remat), which this model charges explicitly.
+
+def moe_comm_bytes_per_step(n_shared: int, n_expert: int, variant: str
+                            ) -> Dict[str, float]:
+    """Slow/fast-tier wire bytes for one MoE train step."""
+    b = dict(comm_bytes_per_step(n_shared + n_expert, variant))
+    M_e = 2.0 * n_expert
+    qw = variant in ("zeropp", "qwz")
+    # nested-remat re-gather of the expert chunks, forward (qwZ) tier
+    b["slow"] += (0.5 if qw else 1.0) * M_e
+    return b
+
+
+def moe_step_time(n_shared: int, n_expert: int, n_active: int,
+                  tokens_dev: int, variant: str, slow_bw: float) -> float:
+    """Synchronous (prefetch=0) MoE step time."""
+    c = 8.0 * n_active * tokens_dev / PEAK
+    b = moe_comm_bytes_per_step(n_shared, n_expert, variant)
+    return c + b["slow"] / slow_bw + b["fast"] / FAST_BW
+
+
+def moe_step_time_overlap(n_shared: int, n_expert: int, n_active: int,
+                          tokens_dev: int, variant: str, slow_bw: float,
+                          overlap: float = MEASURED_MOE_OVERLAP) -> float:
+    """Chunk/layer prefetched (prefetch=1) MoE step time."""
+    c = 8.0 * n_active * tokens_dev / PEAK
+    b = moe_comm_bytes_per_step(n_shared, n_expert, variant)
+    t_comm = b["slow"] / slow_bw + b["fast"] / FAST_BW
+    return max(c, overlap * t_comm) + (1.0 - overlap) * t_comm
+
+
+def deepseek_moe_16b_splits(n_gpus: int = 64):
+    """(n_shared, n_expert, n_active) parameters per device, derived from
+    the registered deepseek-moe-16b config so the projection tracks it."""
+    from repro.configs import get_config
+    c = get_config("deepseek-moe-16b")
+    per_expert = 3 * c.d_model * c.moe_ff
+    attn = 2 * c.d_model * (c.n_heads + c.n_kv_heads) * c.d_head
+    shared = 2 * c.vocab * c.d_model + c.n_layers * (
+        attn + c.d_model * c.n_experts
+        + 3 * c.d_model * c.moe_ff * c.n_shared)
+    expert = c.n_layers * c.n_experts * per_expert
+    active = shared + c.n_layers * c.top_k * per_expert
+    return shared / n_gpus, expert / n_gpus, active / n_gpus
+
+
 def main():
     # paper Table 2 model sizes (18B..138B) at 2K/1K tokens per GPU
     sizes = {"18B": 18e9, "49B": 49e9, "91B": 91e9, "138B": 138e9}
@@ -118,6 +183,25 @@ def main():
         print(f"{name}: zeropp@2IB {model_tflops(n/384, 2048, tz):.2f} TF "
               f"vs baseline@8IB {model_tflops(n/384, 2048, tb):.2f} TF "
               f"-> ratio {tb/tz:.2f}")
+
+    print(f"# MoE projection (deepseek-moe-16b, 64 GPUs): chunk/layer "
+          f"schedule, f={MEASURED_MOE_OVERLAP:.2f} measured")
+    print("tokens_dev,bandwidth,variant,comm_compute_ratio,sync_tflops,"
+          "overlap_tflops,prefetch_speedup")
+    n_sh, n_ex, n_ac = deepseek_moe_16b_splits()
+    for tokens in (2048, 1024):
+        for bw_name, bw in SLOW_BWS.items():
+            for variant in ("baseline", "zeropp"):
+                ts_ = moe_step_time(n_sh, n_ex, n_ac, tokens, variant, bw)
+                to = moe_step_time_overlap(n_sh, n_ex, n_ac, tokens,
+                                           variant, bw)
+                b = moe_comm_bytes_per_step(n_sh, n_ex, variant)
+                c = 8.0 * n_ac * tokens / PEAK
+                ratio = (b["slow"] / bw + b["fast"] / FAST_BW) / c
+                fs = model_tflops(n_ac, tokens, ts_)
+                fo = model_tflops(n_ac, tokens, to)
+                print(f"{tokens},{bw_name},{variant},{ratio:.2f},"
+                      f"{fs:.2f},{fo:.2f},{ts_ / to:.2f}x")
 
     print(f"# Prefetch projection: overlapped (f={MEASURED_OVERLAP:.2f} "
           f"measured, see core/schedule.py) vs synchronous schedule")

@@ -31,9 +31,10 @@ _QMAX = {8: 127.0, 4: 7.0}
 _SEG_ELEMS = 1 << 23
 
 
-def _segments(n: int, block: int, target: int = _SEG_ELEMS) -> int:
+def _segments(n: int, block: int, target: Optional[int] = None) -> int:
     """Largest segment count such that n/nseg is a multiple of block and
     <= target elements; 1 means no segmentation."""
+    target = _SEG_ELEMS if target is None else target
     if n <= target or n % block:
         return 1
     nb = n // block
@@ -70,8 +71,12 @@ class QuantConfig:
         return self.block_size if self.bits == 8 else self.block_size // 2
 
     def payload_bytes(self, n: int) -> int:
-        """Communication payload (quantized values only) for n elements."""
-        return n if self.bits == 8 else n // 2
+        """Communication payload (quantized values only) for n elements.
+
+        int4 packs two values per byte; an odd trailing element still
+        occupies a whole byte (ceil), so dryrun/comm-volume accounting
+        matches the bytes actually moved."""
+        return n if self.bits == 8 else (n + 1) // 2
 
     def wire_bytes(self, n: int, scale_bytes: int = 2) -> int:
         """Payload + scales actually moved on the wire for n elements."""
@@ -121,21 +126,35 @@ def quantize_blockwise(
     if n % cfg.block_size:
         raise ValueError(f"trailing dim {n} not a multiple of block {cfg.block_size}")
 
-    if key is None:
-        if x.ndim == 1:
-            nseg = _segments(n, cfg.block_size)
-            if nseg > 1:
-                seg = n // nseg
+    # Segmentation applies with or without stochastic rounding: the key is
+    # split per segment/row so the fp32 intermediates stay segment-sized.
+    # (Skipping segmentation when a key was present used to materialize the
+    # full-buffer fp32 temporary — the exact peak-memory spike _SEG_ELEMS
+    # exists to prevent — on stochastic qgZ of large flat gradients.)
+    if x.ndim == 1:
+        nseg = _segments(n, cfg.block_size)
+        if nseg > 1:
+            seg = n // nseg
+            if key is None:
                 p, s = jax.lax.map(lambda xs: quantize_blockwise(xs, cfg),
                                    x.reshape(nseg, seg))
-                return p.reshape(-1), s.reshape(-1)
-        elif x.size > _SEG_ELEMS and n <= _SEG_ELEMS:
-            # multi-dim (e.g. qgZ's (Y, X, L) slices): map over flattened
-            # leading rows so the fp32 intermediate is one row at a time
-            lead = x.shape[:-1]
-            rows = x.reshape(-1, n)
+            else:
+                p, s = jax.lax.map(
+                    lambda a: quantize_blockwise(a[0], cfg, key=a[1]),
+                    (x.reshape(nseg, seg), jax.random.split(key, nseg)))
+            return p.reshape(-1), s.reshape(-1)
+    elif x.size > _SEG_ELEMS and n <= _SEG_ELEMS:
+        # multi-dim (e.g. qgZ's (Y, X, L) slices): map over flattened
+        # leading rows so the fp32 intermediate is one row at a time
+        lead = x.shape[:-1]
+        rows = x.reshape(-1, n)
+        if key is None:
             p, s = jax.lax.map(lambda r: quantize_blockwise(r, cfg), rows)
-            return (p.reshape(*lead, -1), s.reshape(*lead, -1))
+        else:
+            p, s = jax.lax.map(
+                lambda a: quantize_blockwise(a[0], cfg, key=a[1]),
+                (rows, jax.random.split(key, rows.shape[0])))
+        return (p.reshape(*lead, -1), s.reshape(*lead, -1))
 
     nblocks = n // cfg.block_size
     xb = x.reshape(*x.shape[:-1], nblocks, cfg.block_size).astype(jnp.float32)

@@ -34,6 +34,17 @@ schedule with extra steps.
 both schedules issue identical collectives in identical per-layer order,
 so losses match exactly (tests/test_schedule.py proves it).
 
+MoE stacks use the same machinery at TWO granularities (DESIGN.md §3):
+the layer scan prefetches the next layer's shared (attn/router/shared-
+expert) gather exactly as above, with the routed-expert chunk stack riding
+through ``xs`` unpeeked; inside each layer, :func:`zero_chunk_scan` runs
+the expert-chunk pipeline — chunk c+1's weight gather issued under chunk
+c's grouped GEMMs, chunk gradients' qgZ reduce pipelined one step behind.
+One known cost of the nesting: the outer scan's backward remat re-runs
+the inner chunk scan, so each expert chunk is re-gathered once on the
+forward (qwZ) tier during backward — overlappable, and identical values,
+but extra wire bytes (see ROADMAP open items for the hpZ-aware recompute).
+
 Cost of the uniform scan body: the forward issues one wasted gather (the
 last iteration prefetches layer 0 again, result discarded) and the
 backward one dummy reduce-scatter (of zeros) and one wasted fast-tier
@@ -254,6 +265,43 @@ def _prefetched(f: Callable, z: ZeroConfig):
 
     scanned.defvjp(fwd, scanned_bwd)
     return scanned
+
+
+# ---------------------------------------------------------------------------
+# carry-less chunk pipeline (MoE expert chunks)
+# ---------------------------------------------------------------------------
+
+def _chunk_runner(engine, f: Callable, z: ZeroConfig):
+    """Adapt a carry-less per-chunk ``f(W_full, x, *bargs) -> y`` onto a
+    scan engine by threading a dummy scalar carry."""
+    run = engine(lambda W, h, x, *b: (h, f(W, x, *b)), z)
+
+    def run_chunks(stacked, xs, *bargs):
+        _, ys = run(stacked, jnp.zeros((), jnp.float32), xs, *bargs)
+        return ys
+
+    return run_chunks
+
+
+def zero_chunk_scan(f: Callable, z: ZeroConfig):
+    """Chunked-parameter pipeline: ``f(W_full, x, *bargs) -> y`` scanned
+    over stacked per-chunk primary shards with the double-buffered schedule
+    of :func:`zero_apply_scan` (chunk c+1's gather issued under chunk c's
+    compute; per-chunk qgZ reduce pipelined one step behind in backward).
+
+    Chunks are independent — there is no carry.  Returns
+    ``run(stacked, xs, *bargs) -> ys``, differentiable w.r.t. ``stacked``
+    and the float leaves of ``xs``/``bargs``.  Used for the MoE
+    routed-expert chunks, where the per-chunk slot buffers are rebuilt
+    from the token activations inside each chunk's own gather scope
+    (models/model.py).
+    """
+    return _chunk_runner(zero_apply_scan, f, z)
+
+
+def zero_chunk_scan_inference(f: Callable, z: ZeroConfig):
+    """Serving-path :func:`zero_chunk_scan`: same forward pipeline, no vjp."""
+    return _chunk_runner(zero_scan_inference, f, z)
 
 
 # ---------------------------------------------------------------------------

@@ -587,9 +587,13 @@ def main():
           f"compile={info.get('compile_s')}s")
     ov = info.get("overlap", {})
     if "overlap_fraction" in ov:
+        loops = ov.get("per_loop", {})
+        nested = sum(1 for d in loops.values()
+                     if d.get("outer_mult", 1.0) > 1.0)
         print(f"  overlap: fraction={ov['overlap_fraction']:.3f} "
               f"({ov['overlappable_collectives']}/{ov['in_loop_collectives']}"
-              f" in-loop collectives; async pairs={ov['async_pairs']})")
+              f" in-loop collectives over {len(loops)} loops, {nested} "
+              f"nested; async pairs={ov['async_pairs']})")
 
 
 if __name__ == "__main__":

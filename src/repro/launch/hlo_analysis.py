@@ -478,7 +478,10 @@ def estimate_peak_bytes(text: str) -> float:
 #
 # ``overlap_fraction`` is the wire-byte-weighted share of in-loop
 # collectives that are overlappable; async pairs, when present, are
-# reported alongside.
+# reported alongside.  Nested loops (the MoE expert-chunk scan inside the
+# layer scan) are weighted by their enclosing trip-count product, and a
+# loop body with no compute at all (gather-only remat loops) exposes its
+# collectives — see _body_overlap / _loop_multipliers.
 
 
 def _fusion_has_dot(comps, name: str, memo: Dict[str, bool],
@@ -517,7 +520,13 @@ def _is_compute(comps, ins: Instr, memo: Dict[str, bool]) -> bool:
 def _body_overlap(comps, body: str, fus_memo: Dict[str, bool]
                   ) -> List[Dict]:
     """Classify each collective in one while body as overlappable or
-    exposed, by within-iteration dependence on matmul compute."""
+    exposed, by within-iteration dependence on matmul compute.
+
+    A body with NO matmul compute at all (e.g. the gather-only loop XLA
+    leaves behind when a nested remat's recomputed GEMMs are dead-code
+    eliminated — the MoE expert-chunk re-gather) exposes every collective:
+    independence means nothing when the iteration has nothing to hide
+    behind."""
     instrs = comps.get(body, [])
     by_name = {i.name: i for i in instrs}
     users: Dict[str, List[str]] = {}
@@ -560,6 +569,7 @@ def _body_overlap(comps, body: str, fus_memo: Dict[str, bool]
                 stack.append(o)
         return False
 
+    has_compute = any(_is_compute(comps, i, fus_memo) for i in instrs)
     out = []
     shapes = {i.name: i.type_str for i in instrs}
     for ins in instrs:
@@ -571,7 +581,8 @@ def _body_overlap(comps, body: str, fus_memo: Dict[str, bool]
         groups = _parse_groups(ins.line)
         n = groups.shape[1] if groups is not None else 0
         wire = _wire_bytes(base, in_b, out_b, n) if n else float(in_b)
-        overlappable = (not reaches_compute_down(ins.name)
+        overlappable = (has_compute
+                        and not reaches_compute_down(ins.name)
                         and not derives_from_compute_up(ins.name))
         out.append({"op": base, "name": ins.name, "wire_bytes": wire,
                     "overlappable": overlappable})
@@ -607,21 +618,76 @@ def _async_pairs(comps, fus_memo: Dict[str, bool]) -> Tuple[int, int]:
     return pairs, enclosing
 
 
+def _loop_multipliers(comps, entry: str) -> Dict[str, float]:
+    """body name -> product of ENCLOSING loops' trip counts, walking from
+    ``entry`` through while/call/conditional edges.
+
+    A while nested inside another while's body (the MoE expert-chunk scan
+    inside the layer scan) runs its trips once per outer iteration; its
+    wire bytes must be weighted by the outer trip product or the nested
+    (overlappable) chunk gathers are undercounted relative to the
+    top-level loops.  Fusions are not traversed (XLA fusions cannot
+    contain loops)."""
+    mults: Dict[str, float] = {}
+    seen = set()
+
+    def walk(name: str, mult: float, depth: int = 0):
+        if depth > 50 or (name, mult) in seen:
+            return
+        seen.add((name, mult))
+        for ins in comps.get(name, []):
+            if ins.opcode == "while":
+                body = _attr_comp(ins.line, "body")
+                cond = _attr_comp(ins.line, "condition")
+                trips = _trip_count(comps, cond) if cond else 1
+                if body:
+                    mults[body] = max(mults.get(body, 0.0), mult)
+                    walk(body, mult * trips, depth + 1)
+            elif ins.opcode in ("call", "async-start", "conditional"):
+                for key in ("to_apply", "calls"):
+                    tgt = _attr_comp(ins.line, key)
+                    if tgt and tgt in comps:
+                        walk(tgt, mult, depth + 1)
+                if ins.opcode == "conditional" and \
+                        "branch_computations" in ins.line:
+                    for tgt in re.findall(
+                            r"%([\w.\-]+)",
+                            ins.line.split("branch_computations")[-1]):
+                        if tgt in comps:
+                            walk(tgt, mult, depth + 1)
+
+    walk(entry, 1.0)
+    return mults
+
+
+def _entry_name(text: str, comps) -> Optional[str]:
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_RE.match(line)
+            if m:
+                return m.group(1)
+    return max(comps, key=lambda k: len(comps[k])) if comps else None
+
+
 def analyze_overlap(text: str) -> Dict:
     """Overlap metrics for a compiled HLO module (see block comment above).
 
     Returns:
       in_loop_wire_bytes      — Σ wire bytes of collectives in while bodies
-                                (× trip count)
+                                (× trip count × enclosing-loop trips)
       overlapped_wire_bytes   — the overlappable subset
       overlap_fraction        — overlapped / in_loop (0.0 when no in-loop
                                 collectives)
-      per_loop                — per while-body breakdown
+      per_loop                — per while-body breakdown (``outer_mult`` is
+                                the enclosing-loop trip product — nested
+                                MoE chunk scans run once per outer layer)
       async_pairs / async_pairs_enclosing_compute — LHS-scheduler evidence,
                                 when the backend emits async collectives
     """
     comps = parse_module(text)
     fus_memo: Dict[str, bool] = {}
+    entry = _entry_name(text, comps)
+    mults = _loop_multipliers(comps, entry) if entry else {}
     per_loop = {}
     total = overlapped = 0.0
     n_coll = n_over = 0
@@ -637,11 +703,13 @@ def analyze_overlap(text: str) -> Dict:
             colls = _body_overlap(comps, body, fus_memo)
             if not colls:
                 continue
-            wire = sum(c["wire_bytes"] for c in colls) * trips
+            mult = mults.get(body, 1.0)
+            wire = sum(c["wire_bytes"] for c in colls) * trips * mult
             over = sum(c["wire_bytes"] for c in colls
-                       if c["overlappable"]) * trips
+                       if c["overlappable"]) * trips * mult
             per_loop[body] = {
                 "trip_count": trips,
+                "outer_mult": mult,
                 "collectives": len(colls),
                 "overlappable": sum(c["overlappable"] for c in colls),
                 "wire_bytes": wire,

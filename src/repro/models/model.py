@@ -18,7 +18,9 @@ from jax import lax
 
 from repro.configs.base import ArchConfig
 from repro.core.partition import ParamSpec
-from repro.core.schedule import zero_apply_scan, zero_scan_inference
+from repro.core.schedule import (zero_apply_scan, zero_chunk_scan,
+                                 zero_chunk_scan_inference,
+                                 zero_scan_inference)
 from repro.core.zeropp import ZeroConfig, zero_apply, zero_apply_inference
 from repro.models import attention as attn_lib
 from repro.models import layers as nn
@@ -222,37 +224,43 @@ class Model:
 
     # ----------------------------------------------------------- moe layer
 
-    def _moe_layer(self, zw, rs: RunSpec, pflat, eflat, h, cos, sin,
+    def _moe_layer(self, rs: RunSpec, train: bool, W, eflat, h, cos, sin,
                    cache_pos, cache):
-        """One MoE layer with chunked expert gathers.
+        """One MoE layer given the layer's already-gathered shared weights.
 
-        ``zw`` wraps a function into the ZeRO++ engine (zero_apply for
-        training, zero_apply_inference for serving).  Structure:
+        The LAYER-level engine (zero_apply_scan for training,
+        zero_scan_inference for serving) owns the shared-param gather: with
+        ``prefetch>=1`` layer i+1's qwZ gather is in flight under this
+        layer's routing/expert compute, and in backward the hpZ gather /
+        qgZ reduce of the shared params are prefetched/pipelined exactly
+        like a dense block.  Inside the layer:
 
-          pre   (1 gather):  attn + ln2 + router logits + shared experts
-          dispatch (pure):   sort-based token->slot routing, indices only
-          chunks (nc gathers): each chunk rebuilds its slot buffer from the
-                             token activations and runs the grouped GEMMs
-          combine (pure):    gated scatter back to tokens
+          pre     (gathered): attn + ln2 + router logits + shared experts
+          dispatch (pure):    sort-based token->slot routing, indices only
+          chunks  (nc-deep zero_chunk_scan): each chunk rebuilds its slot
+                              buffer from the token activations and runs
+                              the grouped GEMMs; chunk c+1's expert-weight
+                              gather is issued under chunk c's expert_ffn
+                              (prefetch=0: synchronous per-chunk gathers)
+          combine (pure):     gated scatter back to tokens
 
+        Routing stays on the critical path — chunk 0's gather cannot start
+        earlier than dispatch because the chunk scan consumes disp indices
+        — but every expert-weight byte after it is double-buffered.
         Keeping only (h, hn2, indices) as inter-gather values bounds the
         per-layer activation residual to O(T·d), not O(T·k·capacity·d).
         Returns (h_out, new_cache, aux_loss).
         """
         cfg, z = self.cfg, self.zcfg
-        spec = self.period_spec
         B, S = h.shape[0], h.shape[1]
         d = cfg.d_model
         nc = cfg.expert_chunks
         Ec = cfg.n_experts // nc
 
-        def pre_f(W, h, cos, sin, cache_pos, cache):
-            p = _sub(spec.unpack(W.astype(z.compute_dtype)), "0.")
-            posd = {"rope": (cos, sin), "cache_pos": cache_pos}
-            return moe_pre_block(cfg, p, h, rs, posd, cache)
-
-        h2, hn2, logits, shared_y, new_cache = zw(pre_f)(
-            pflat, h, cos, sin, cache_pos, cache)
+        p = _sub(self.period_spec.unpack(W.astype(z.compute_dtype)), "0.")
+        posd = {"rope": (cos, sin), "cache_pos": cache_pos}
+        h2, hn2, logits, shared_y, new_cache = moe_pre_block(
+            cfg, p, h, rs, posd, cache)
 
         capacity = None
         if rs.mode != "train":  # serving must be drop-free (decode==prefill)
@@ -263,7 +271,7 @@ class Model:
             capacity_factor=cfg.capacity_factor, capacity=capacity)
         chunk_slots = Ec * disp.cap
 
-        def chunk_f(Wc, hn2, dest, src_tok, g_sorted, c):
+        def chunk_f(Wc, c, hn2, dest, src_tok, g_sorted):
             pc = self.expert_spec.unpack(Wc.astype(z.compute_dtype))
             buf = moe_lib.build_chunk_buf(hn2, dest, src_tok,
                                           c * chunk_slots, chunk_slots)
@@ -275,14 +283,10 @@ class Model:
                                           chunk_slots)
             return out * g.reshape(Ec, disp.cap, 1).astype(out.dtype)
 
-        apc = zw(chunk_f)
-
-        def cbody(carry, xs):
-            ef, c = xs
-            return carry, apc(ef, hn2, disp.dest, disp.src_tok,
-                              disp.g_sorted, c)
-
-        _, outs = lax.scan(cbody, (), (eflat, jnp.arange(nc, dtype=jnp.int32)))
+        cs = zero_chunk_scan(chunk_f, z) if train \
+            else zero_chunk_scan_inference(chunk_f, z)
+        outs = cs(eflat, jnp.arange(nc, dtype=jnp.int32),
+                  hn2, disp.dest, disp.src_tok, disp.g_sorted)
         y = moe_lib.moe_combine(outs.reshape(cfg.n_experts, disp.cap, d),
                                 disp)
         h3 = h2 + shared_y + y.reshape(B, S, d).astype(h2.dtype)
@@ -315,19 +319,17 @@ class Model:
             return h, aux
 
         if self.is_moe:
-            # MoE layers interleave routing with multiple expert-chunk
-            # gathers; the double-buffered schedule does not apply — the
-            # prefetch knob is ignored and collectives stay synchronous.
-            zw = lambda f: zero_apply(f, z)
-
-            def body(h, xs):
-                pflat, eflat = xs
-                h2, _, aux = self._moe_layer(zw, rs, pflat, eflat, h,
+            # the same prefetched layer scan as the dense stack: layer
+            # i+1's SHARED-param gather rides under layer i's routing +
+            # expert compute, and the expert-chunk stack flows through xs
+            # into each layer's own zero_chunk_scan pipeline
+            def moe_f(W, h, eflat, cos, sin):
+                h2, _, aux = self._moe_layer(rs, True, W, eflat, h,
                                              cos, sin, None, None)
                 return h2, aux
 
-            h, auxs = lax.scan(body, h,
-                               (params["blocks"], params["experts"]))
+            ap = zero_apply_scan(moe_f, z)
+            h, auxs = ap(params["blocks"], h, params["experts"], cos, sin)
         else:
             # prefetched (z.prefetch>=1) or synchronous (0) block scan —
             # see core/schedule.py
@@ -458,14 +460,13 @@ class Model:
         if self.is_moe:
             cos, sin = pos["rope"]
 
-            def body(h, xs):
-                pflat, eflat = xs
-                h2, c, _ = self._moe_layer(zi, rs, pflat, eflat, h,
+            def moe_f(W, h, eflat, cos, sin):
+                h2, c, _ = self._moe_layer(rs, False, W, eflat, h,
                                            cos, sin, None, None)
                 return h2, (c,)
 
-            h, caches = lax.scan(body, h,
-                                 (params["blocks"], params["experts"]))
+            ap = zero_scan_inference(moe_f, z)
+            h, caches = ap(params["blocks"], h, params["experts"], cos, sin)
         else:
             ap = zero_scan_inference(
                 lambda W, h, x: period_fn(W, h), z)
@@ -519,16 +520,17 @@ class Model:
         if self.is_moe:
             cos, sin = pos["rope"]
 
-            def body(h, xs):
-                pflat, eflat, cache = xs
-                h2, c, _ = self._moe_layer(zi, rs, pflat, eflat, h,
-                                           cos, sin, pos["cache_pos"],
-                                           cache[0])
+            def moe_f(W, h, x, cos, sin, cache_pos):
+                eflat, cache = x
+                h2, c, _ = self._moe_layer(rs, False, W, eflat, h,
+                                           cos, sin, cache_pos, cache[0])
                 return h2, (c,)
 
-            h, new_caches = lax.scan(
-                body, h,
-                (params["blocks"], params["experts"], caches["blocks"]))
+            ap = zero_scan_inference(moe_f, z)
+            h, new_caches = ap(
+                params["blocks"], h,
+                (params["experts"], caches["blocks"]), cos, sin,
+                pos["cache_pos"])
         else:
             ap = zero_scan_inference(
                 lambda W, h, cache: period_fn(W, h, cache), z)

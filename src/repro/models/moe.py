@@ -27,9 +27,11 @@ class Dispatch(NamedTuple):
     """Routing result: token->expert-slot assignment (pure index work).
 
     Splitting dispatch from expert compute lets the ZeRO++ engine gather
-    expert weights in CHUNKS (one zero_apply per chunk) — the analogue of
-    DeepSpeed's per-module gather granularity, without which a 128-expert
-    layer would materialize multi-GB gathered weight buffers.
+    expert weights in CHUNKS (a zero_chunk_scan over the stacked chunk
+    shards: chunk c+1's gather in flight under chunk c's grouped GEMMs,
+    prefetch=0 falling back to one synchronous zero_apply per chunk) — the
+    analogue of DeepSpeed's per-module gather granularity, without which a
+    128-expert layer would materialize multi-GB gathered weight buffers.
 
     Only INDICES are stored (not the (E, cap, d) slot buffer): each chunk
     rebuilds its slice of the buffer from the token activations inside its

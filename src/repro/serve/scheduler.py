@@ -40,7 +40,21 @@ class Request:
 
 
 def default_buckets(kv_len: int, start: int = 8) -> Tuple[int, ...]:
-    """Power-of-two ladder start, 2*start, ... capped at kv_len."""
+    """Power-of-two ladder start, 2*start, ... capped at kv_len.
+
+    ``start`` is clamped to ``kv_len // 2`` so the ladder always holds at
+    least one bucket strictly below capacity — with ``start >= kv_len`` it
+    used to degenerate to the single bucket ``(kv_len,)``, silently
+    padding every short prompt to full KV capacity in prefill.  A ladder
+    that cannot have a sub-capacity bucket (``kv_len < 2``) raises.
+    """
+    if start < 1:
+        raise ValueError(f"bucket ladder start must be >= 1, got {start}")
+    if kv_len < 2:
+        raise ValueError(
+            f"kv_len={kv_len} leaves a degenerate one-bucket ladder: every "
+            f"prompt would prefill padded to full KV capacity")
+    start = min(start, kv_len // 2)
     out = []
     b = start
     while b < kv_len:

@@ -122,3 +122,106 @@ def test_wire_bytes_accounting():
     assert cfg8.payload_bytes(n) == n          # 2x reduction vs bf16 (2n)
     assert cfg4.payload_bytes(n) == n // 2     # 4x reduction vs bf16
     assert cfg8.wire_bytes(n) == n + (n // 256) * 2
+
+
+def test_payload_bytes_odd_int4_ceil():
+    """An odd int4 payload still moves ceil(n/2) bytes on the wire —
+    floor division used to undercount by a byte."""
+    cfg4 = QuantConfig(bits=4, block_size=256)
+    for n in (1, 3, 255, 1001):
+        assert cfg4.payload_bytes(n) == (n + 1) // 2, n
+        nblocks = -(-n // 256)
+        assert cfg4.wire_bytes(n) == (n + 1) // 2 + nblocks * 2, n
+    assert cfg4.payload_bytes(256) == 128
+    assert QuantConfig(bits=8, block_size=256).payload_bytes(1001) == 1001
+
+
+# ---------------------------------------------------------------------------
+# segmented stochastic quantization (large-buffer peak-memory regression)
+# ---------------------------------------------------------------------------
+
+
+def _scan_eqns(jaxpr):
+    """All scan (lax.map) eqns reachable in a closed jaxpr, recursively."""
+    out = []
+    todo = [jaxpr.jaxpr]
+    while todo:
+        j = todo.pop()
+        for eqn in j.eqns:
+            if eqn.primitive.name == "scan":
+                out.append(eqn)
+            for v in eqn.params.values():
+                if hasattr(v, "jaxpr"):
+                    todo.append(v.jaxpr if hasattr(v.jaxpr, "eqns")
+                                else v.jaxpr.jaxpr)
+    return out
+
+
+def test_stochastic_quantization_stays_segmented(monkeypatch):
+    """Stochastic rounding must NOT disable lax.map segmentation of large
+    flat buffers (the full-buffer fp32 temporary is the peak-memory spike
+    _SEG_ELEMS exists to prevent): the key is split per segment instead."""
+    from repro.core import quant
+    monkeypatch.setattr(quant, "_SEG_ELEMS", 1024)
+    cfg = QuantConfig(bits=8, block_size=128, stochastic=True)
+    n, nseg = 4096, 4
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    key = jax.random.PRNGKey(11)
+
+    # determinism given a fixed key
+    q1, s1 = quantize_blockwise(x, cfg, key=key)
+    q2, s2 = quantize_blockwise(x, cfg, key=key)
+    assert np.array_equal(np.asarray(q1), np.asarray(q2))
+    assert np.array_equal(np.asarray(s1), np.asarray(s2))
+
+    # the traced program segments: a scan whose body intermediates are
+    # segment-sized, never the full n-element fp32 buffer
+    jaxpr = jax.make_jaxpr(
+        lambda xx, kk: quantize_blockwise(xx, cfg, key=kk))(x, key)
+    scans = _scan_eqns(jaxpr)
+    assert scans, "expected a lax.map scan over segments"
+    body = scans[0].params["jaxpr"].jaxpr
+    peak = max(int(np.prod(v.aval.shape)) for eqn in body.eqns
+               for v in eqn.outvars)
+    assert peak <= n // nseg, (peak, n // nseg)
+
+    # matches per-segment quantization with per-segment split keys: the
+    # payload (and hence the wire traffic) is identical; scales may differ
+    # by 1 ulp between the fused map body and the eager division
+    keys = jax.random.split(key, nseg)
+    parts = [quantize_blockwise(x.reshape(nseg, -1)[i], cfg, key=keys[i])
+             for i in range(nseg)]
+    np.testing.assert_array_equal(
+        np.asarray(q1), np.concatenate([np.asarray(p) for p, _ in parts]))
+    np.testing.assert_allclose(
+        np.asarray(s1), np.concatenate([np.asarray(s) for _, s in parts]),
+        rtol=3e-7)
+
+    # roundtrip error bound still holds on the segmented stochastic path
+    y = np.asarray(dequantize_blockwise(q1, s1, cfg))
+    xb = np.asarray(x).reshape(-1, 128)
+    bound = np.abs(xb).max(-1, keepdims=True) / cfg.qmax  # SR: one full step
+    assert (np.abs(y.reshape(-1, 128) - xb) <= bound + 1e-7).all()
+
+
+def test_stochastic_quantization_segments_rows(monkeypatch):
+    """Multi-dim stochastic path: row-mapped segmentation with split keys
+    (same regression as the flat path, for qgZ's (Y, X, L) slices)."""
+    from repro.core import quant
+    monkeypatch.setattr(quant, "_SEG_ELEMS", 512)
+    cfg = QuantConfig(bits=8, block_size=64, stochastic=True)
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.normal(size=(8, 256)).astype(np.float32))  # 2k elems
+    key = jax.random.PRNGKey(3)
+    q, s = quantize_blockwise(x, cfg, key=key)
+    assert q.shape == (8, 256) and s.shape == (8, 4)
+    q2, s2 = quantize_blockwise(x, cfg, key=key)
+    assert np.array_equal(np.asarray(q), np.asarray(q2))
+    keys = jax.random.split(key, 8)
+    rows = [quantize_blockwise(x[i], cfg, key=keys[i]) for i in range(8)]
+    np.testing.assert_array_equal(
+        np.asarray(q), np.stack([np.asarray(p) for p, _ in rows]))
+    np.testing.assert_allclose(
+        np.asarray(s), np.stack([np.asarray(sc) for _, sc in rows]),
+        rtol=3e-7)

@@ -36,6 +36,34 @@ def test_qgz_1hop_validates_input():
 
 
 # ---------------------------------------------------------------------------
+# MoE chunk/layer schedule (the prefetched expert path)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_moe_prefetch_loss_and_grads_8dev():
+    """MoE prefetch=1 (layer gathers + chunk pipeline double-buffered) ==
+    prefetch=0 (synchronous): bit-exact losses AND gradients, 8 devices."""
+    run_checks(["check_moe_prefetch_matches_sync"], n_devices=8,
+               timeout=1200)
+
+
+@pytest.mark.slow
+def test_moe_prefetch_loss_and_grads_4dev():
+    """Same bit-exactness on the smaller 2x2 mesh (different shard and
+    secondary-group sizes exercise the alignment paths)."""
+    run_checks(["check_moe_prefetch_matches_sync"], n_devices=4,
+               timeout=1200)
+
+
+@pytest.mark.slow
+def test_moe_prefetch_overlap_hlo():
+    """Compiled HLO: MoE overlap_fraction > 0.5 with prefetch=1 (both the
+    layer scan and the nested chunk scans), == 0 with prefetch=0."""
+    run_checks(["check_moe_prefetch_overlap_fraction"], n_devices=8,
+               timeout=1200)
+
+
+# ---------------------------------------------------------------------------
 # analyze_overlap unit tests (synthetic HLO, no devices)
 # ---------------------------------------------------------------------------
 
@@ -105,6 +133,107 @@ def test_analyze_overlap_prefetch_detected():
     # trip count parsed from the loop condition constant
     (loop,) = ov["per_loop"].values()
     assert loop["trip_count"] == 4
+
+
+# nested loops: a 3-trip inner (chunk) loop inside a 4-trip outer (layer)
+# loop — the inner loop's wire bytes must be weighted by the outer trips
+_NESTED_HLO = """
+HloModule nested
+
+%icond (p: (s32[], f32[8], f32[64])) -> pred[] {
+  %p = (s32[], f32[8], f32[64]) parameter(0)
+  %i = s32[] get-tuple-element((s32[], f32[8], f32[64]) %p), index=0
+  %n = s32[] constant(3)
+  ROOT %lt = pred[] compare(s32[] %i, s32[] %n), direction=LT
+}
+
+%ibody (p: (s32[], f32[8], f32[64])) -> (s32[], f32[8], f32[64]) {
+  %p = (s32[], f32[8], f32[64]) parameter(0)
+  %i = s32[] get-tuple-element((s32[], f32[8], f32[64]) %p), index=0
+  %w = f32[8]{0} get-tuple-element((s32[], f32[8], f32[64]) %p), index=1
+  %h = f32[64]{0} get-tuple-element((s32[], f32[8], f32[64]) %p), index=2
+  %g = f32[64]{0} all-gather(f32[8]{0} %w), replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}
+  %wm = f32[8,8]{1,0} reshape(f32[64]{0} %g)
+  %hm = f32[8,8]{1,0} reshape(f32[64]{0} %h)
+  %mm = f32[8,8]{1,0} dot(f32[8,8]{1,0} %hm, f32[8,8]{1,0} %wm), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %h2 = f32[64]{0} reshape(f32[8,8]{1,0} %mm)
+  %one = s32[] constant(1)
+  %i2 = s32[] add(s32[] %i, s32[] %one)
+  ROOT %out = (s32[], f32[8], f32[64]) tuple(s32[] %i2, f32[8]{0} %w, f32[64]{0} %h2)
+}
+
+%ocond (p: (s32[], f32[8], f32[64])) -> pred[] {
+  %p = (s32[], f32[8], f32[64]) parameter(0)
+  %j = s32[] get-tuple-element((s32[], f32[8], f32[64]) %p), index=0
+  %m = s32[] constant(4)
+  ROOT %lt = pred[] compare(s32[] %j, s32[] %m), direction=LT
+}
+
+%obody (p: (s32[], f32[8], f32[64])) -> (s32[], f32[8], f32[64]) {
+  %p = (s32[], f32[8], f32[64]) parameter(0)
+  %j = s32[] get-tuple-element((s32[], f32[8], f32[64]) %p), index=0
+  %w = f32[8]{0} get-tuple-element((s32[], f32[8], f32[64]) %p), index=1
+  %h = f32[64]{0} get-tuple-element((s32[], f32[8], f32[64]) %p), index=2
+  %zero = s32[] constant(0)
+  %it = (s32[], f32[8], f32[64]) tuple(s32[] %zero, f32[8]{0} %w, f32[64]{0} %h)
+  %iw = (s32[], f32[8], f32[64]) while((s32[], f32[8], f32[64]) %it), condition=%icond, body=%ibody
+  %h3 = f32[64]{0} get-tuple-element((s32[], f32[8], f32[64]) %iw), index=2
+  %one = s32[] constant(1)
+  %j2 = s32[] add(s32[] %j, s32[] %one)
+  ROOT %out = (s32[], f32[8], f32[64]) tuple(s32[] %j2, f32[8]{0} %w, f32[64]{0} %h3)
+}
+
+ENTRY %main (a: (s32[], f32[8], f32[64])) -> (s32[], f32[8], f32[64]) {
+  %a = (s32[], f32[8], f32[64]) parameter(0)
+  ROOT %w0 = (s32[], f32[8], f32[64]) while((s32[], f32[8], f32[64]) %a), condition=%ocond, body=%obody
+}
+"""
+
+
+def test_analyze_overlap_nested_loop_multiplier():
+    ov = analyze_overlap(_NESTED_HLO)
+    (loop,) = ov["per_loop"].values()          # only the inner body gathers
+    assert loop["trip_count"] == 3
+    assert loop["outer_mult"] == 4.0
+    # gather moves 64-8=56 f32 = 224 bytes, x3 trips x4 outer iterations
+    assert ov["in_loop_wire_bytes"] == 224 * 3 * 4
+    assert ov["overlap_fraction"] == 0.0       # sync: gather feeds the dot
+
+
+# a gather-only loop (what XLA leaves of a remat whose recomputed GEMMs are
+# dead): nothing to overlap with inside the iteration -> exposed
+_GATHER_ONLY_HLO = """
+HloModule gatheronly
+
+%cond (p: (s32[], f32[8], f32[64])) -> pred[] {
+  %p = (s32[], f32[8], f32[64]) parameter(0)
+  %i = s32[] get-tuple-element((s32[], f32[8], f32[64]) %p), index=0
+  %n = s32[] constant(2)
+  ROOT %lt = pred[] compare(s32[] %i, s32[] %n), direction=LT
+}
+
+%body (p: (s32[], f32[8], f32[64])) -> (s32[], f32[8], f32[64]) {
+  %p = (s32[], f32[8], f32[64]) parameter(0)
+  %i = s32[] get-tuple-element((s32[], f32[8], f32[64]) %p), index=0
+  %w = f32[8]{0} get-tuple-element((s32[], f32[8], f32[64]) %p), index=1
+  %g = f32[64]{0} all-gather(f32[8]{0} %w), replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}
+  %one = s32[] constant(1)
+  %i2 = s32[] add(s32[] %i, s32[] %one)
+  ROOT %out = (s32[], f32[8], f32[64]) tuple(s32[] %i2, f32[8]{0} %w, f32[64]{0} %g)
+}
+
+ENTRY %main (a: (s32[], f32[8], f32[64])) -> (s32[], f32[8], f32[64]) {
+  %a = (s32[], f32[8], f32[64]) parameter(0)
+  ROOT %w0 = (s32[], f32[8], f32[64]) while((s32[], f32[8], f32[64]) %a), condition=%cond, body=%body
+}
+"""
+
+
+def test_analyze_overlap_gather_only_loop_exposed():
+    ov = analyze_overlap(_GATHER_ONLY_HLO)
+    assert ov["in_loop_collectives"] == 1
+    assert ov["overlappable_collectives"] == 0
+    assert ov["overlap_fraction"] == 0.0
 
 
 _ASYNC_HLO = """

@@ -195,6 +195,24 @@ def test_scheduler_buckets_and_admission():
     assert s.admit(0) == []
 
 
+def test_default_buckets_never_degenerate():
+    """start >= kv_len used to collapse the ladder to (kv_len,), silently
+    padding every short prompt to full KV capacity in prefill."""
+    from repro.serve.scheduler import default_buckets
+
+    assert default_buckets(64) == (8, 16, 32, 64)
+    # start clamped to kv_len // 2: a sub-capacity bucket always exists
+    assert default_buckets(16, start=32) == (8, 16)
+    assert default_buckets(12, start=100) == (6, 12)
+    assert default_buckets(4) == (2, 4)
+    s = FIFOScheduler(kv_len=16, buckets=default_buckets(16, start=64))
+    assert s.bucket_for(3) < 16
+    with pytest.raises(ValueError, match="degenerate"):
+        default_buckets(1)
+    with pytest.raises(ValueError, match="start must be >= 1"):
+        default_buckets(64, start=0)
+
+
 def test_scheduler_rejects_oversized_prompt():
     s = FIFOScheduler(kv_len=16)
     with pytest.raises(ValueError, match="no room to generate"):
