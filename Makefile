@@ -8,7 +8,8 @@ PY       ?= python
 MP8       = XLA_FLAGS=--xla_force_host_platform_device_count=8
 PYPATH    = PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH}
 
-.PHONY: test test-fast bench-smoke bench ckpt-smoke serve-smoke moe-smoke
+.PHONY: test test-fast bench-smoke bench ckpt-smoke serve-smoke moe-smoke \
+        ring-smoke
 
 # tier-1 verify (ROADMAP.md): full suite, stop on first failure
 test:
@@ -49,6 +50,17 @@ moe-smoke:
 	run_checks(['check_moe_prefetch_overlap_fraction'], n_devices=8, \
 	           timeout=1200); \
 	print('moe smoke OK: chunk/layer MoE schedule overlap verified from HLO')"
+
+# prefetch-ring smoke: 8-dev depth-2 dense + MoE overlap check from
+# compiled HLO — structural overlap_fraction at depth 2 must be no lower
+# than the depth-1 measurement, the depth-credited (effective) overlap
+# strictly higher, and the MoE nested-remat expert re-gather no longer
+# exposed (no gather-only loop)
+ring-smoke:
+	$(PYPATH) $(PY) -c "\
+	from repro.testing.subproc import run_checks; \
+	run_checks(['check_ring_overlap_depth'], n_devices=8, timeout=2400); \
+	print('ring smoke OK: depth-2 ring beats depth-1 on dense + MoE')"
 
 # overlap benchmark + suite smoke in one command: verifies the prefetched
 # schedule from compiled HLO on the 8-device CPU mesh, then prints the

@@ -5,6 +5,9 @@
   kernel_bench     — Table 3  (fused vs staged quantization pipeline)
   memory_model     — Fig 4 / Table 4 (DP vs ZeRO-3 vs hpZ vs MiCS)
   convergence      — Fig 14 / Table 5 (loss curves per variant)
+  overlap_bench    — measured schedule overlap vs ring depth (BENCH json:
+                     structural + depth-credited fractions, async pairs,
+                     break-even depth projection; 8-dev subprocess)
   roofline         — §Roofline table from the dry-run JSONs (if present)
 
 Run everything: PYTHONPATH=src python -m benchmarks.run
@@ -19,13 +22,15 @@ import traceback
 
 def main() -> None:
     from benchmarks import (comm_volume, convergence, kernel_bench,
-                            memory_model, roofline, throughput_model)
+                            memory_model, overlap_bench, roofline,
+                            throughput_model)
     sections = {
         "comm_volume": comm_volume.main,
         "throughput_model": throughput_model.main,
         "kernel_bench": kernel_bench.main,
         "memory_model": memory_model.main,
         "convergence": convergence.main,
+        "overlap_bench": overlap_bench.main,
     }
     pick = [a for a in sys.argv[1:] if a in sections] or list(sections)
     failures = []

@@ -42,11 +42,23 @@ MEASURED_OVERLAP = 0.89
 
 # same measurement for the MoE chunk/layer schedule (deepseek-moe-16b
 # reduced, zeropp, prefetch=1): the layer scan's shared-param gathers, the
-# nested expert-chunk gathers and the pipelined reduces are overlappable;
-# exposed remainder = the gather-only expert re-gather loop the nested
-# remat leaves in backward, plus the streaming-LSE unembedding.
+# nested expert-chunk gathers, the pipelined reduces AND — since the
+# hpZ-aware nested recompute (secondary shards threaded through the outer
+# residuals, core/schedule.py f_bwd) removed the gather-only qwZ re-gather
+# loop from backward — the recompute's chunk gathers are all overlappable;
+# exposed remainder = the streaming-LSE unembedding.
 # Reproduce with: make moe-smoke (checks.check_moe_prefetch_overlap_fraction)
-MEASURED_MOE_OVERLAP = 0.63
+MEASURED_MOE_OVERLAP = 0.80
+
+# per-collective launch + wire latency for the depth-k ring model: the
+# fixed cost a gather pays regardless of its size (NCCL launch, network
+# round-trip).  On slow interconnects this is what prefetch depth > 1
+# amortizes — bandwidth is a per-iteration steady-state cost no ring can
+# beat, but latency is per-collective and hides under k iterations.
+COLL_LATENCY = 20e-6
+# collectives issued per layer per step under full ZeRO++ (qwZ payload +
+# scales gathers fwd, hpZ gather bwd, qgZ reduce hops)
+COLLS_PER_LAYER = 4
 
 
 def comm_bytes_per_step(n_params: int, variant: str) -> Dict[str, float]:
@@ -94,6 +106,72 @@ def model_tflops(n_params: int, tokens_dev: int, t: float) -> float:
 
 
 # ---------------------------------------------------------------------------
+# depth-k prefetch-ring step-time model (core/schedule.py)
+# ---------------------------------------------------------------------------
+#
+# The structural model above charges (1-f) of the comm as exposed and lets
+# f ride under compute unconditionally.  The ring model refines the f part
+# per layer: a gather issued `depth` layers ahead has a window of
+# depth·t_layer to complete in, so per layer the exposed residue is
+#
+#   exposed_l = max(0,
+#                   c_bw,                      # bandwidth over one window —
+#                     - t_layer                #   steady state, depth-blind
+#                   c_bw + n_coll·alpha        # latency + bandwidth over a
+#                     - depth·t_layer)         #   depth-deep window
+#
+# i.e. depth can never beat the per-layer bandwidth steady state (one
+# gather is issued per layer regardless of k) but it amortizes the
+# per-collective latency — exactly the small-transfer / slow-interconnect
+# regime (decode batches, 1-2 IB links) where one layer's compute cannot
+# cover a gather.
+
+def step_time_ring(n_params: int, tokens_dev: int, variant: str,
+                   slow_bw: float, depth: int, n_layers: int = 48,
+                   overlap: float = MEASURED_OVERLAP,
+                   latency: float = COLL_LATENCY,
+                   colls_per_layer: int = COLLS_PER_LAYER) -> float:
+    """Step time under a depth-``depth`` prefetch ring (depth=0 is the
+    synchronous schedule; depth=1 the classic double buffer)."""
+    c = 8.0 * n_params * tokens_dev / PEAK
+    b = comm_bytes_per_step(n_params, variant)
+    t_comm = b["slow"] / slow_bw + b["fast"] / FAST_BW
+    t_lat = colls_per_layer * latency * n_layers
+    if depth < 1:
+        return c + t_comm + t_lat
+    t_layer = c / n_layers
+    # the overlappable share f of both bandwidth AND latency rides inside
+    # the depth-deep window; the structurally exposed (1-f) share keeps
+    # its full comm + latency cost regardless of depth (at overlap=0 every
+    # depth collapses to the synchronous time — the ring hides nothing)
+    c_bw = overlap * t_comm / n_layers          # hideable bw time / layer
+    t_l = overlap * colls_per_layer * latency   # hideable latency / layer
+    exposed_l = max(0.0, c_bw - t_layer, c_bw + t_l - depth * t_layer)
+    return (c + n_layers * exposed_l
+            + (1.0 - overlap) * (t_comm + t_lat))
+
+
+def break_even_depth(n_params: int, tokens_dev: int, variant: str,
+                     slow_bw: float, n_layers: int = 48,
+                     overlap: float = MEASURED_OVERLAP,
+                     latency: float = COLL_LATENCY,
+                     colls_per_layer: int = COLLS_PER_LAYER) -> int:
+    """Smallest ring depth after which deepening stops paying (capped at
+    n_layers-1, the ring's hard clamp)."""
+    d = 1
+    while d < n_layers - 1:
+        t_now = step_time_ring(n_params, tokens_dev, variant, slow_bw, d,
+                               n_layers, overlap, latency, colls_per_layer)
+        t_next = step_time_ring(n_params, tokens_dev, variant, slow_bw,
+                                d + 1, n_layers, overlap, latency,
+                                colls_per_layer)
+        if t_next >= t_now - 1e-12:
+            return d
+        d += 1
+    return d
+
+
+# ---------------------------------------------------------------------------
 # MoE step-time model (the chunk/layer prefetched expert path)
 # ---------------------------------------------------------------------------
 #
@@ -102,9 +180,11 @@ def model_tflops(n_params: int, tokens_dev: int, t: float) -> float:
 # Compute therefore scales with ACTIVE params while communication scales
 # with TOTAL params — the worst communication-per-FLOP regime, and exactly
 # where hiding the wire bytes behind compute pays most.  The chunk/layer
-# schedule (core/schedule.py) costs one extra forward-tier expert re-gather
-# in backward (the chunk pipeline is nested inside the layer engine's
-# remat), which this model charges explicitly.
+# schedule nests the chunk pipeline inside the layer engine's remat; with
+# hpZ the chunk SECONDARY shards thread through the outer residuals and
+# the recompute re-gathers ride the fast tier (core/schedule.py
+# zero_chunk_scan_hpz — already inside the fast-tier M of Table 1), so
+# only hpZ-less variants still pay a forward-tier expert re-gather.
 
 def moe_comm_bytes_per_step(n_shared: int, n_expert: int, variant: str
                             ) -> Dict[str, float]:
@@ -112,8 +192,10 @@ def moe_comm_bytes_per_step(n_shared: int, n_expert: int, variant: str
     b = dict(comm_bytes_per_step(n_shared + n_expert, variant))
     M_e = 2.0 * n_expert
     qw = variant in ("zeropp", "qwz")
-    # nested-remat re-gather of the expert chunks, forward (qwZ) tier
-    b["slow"] += (0.5 if qw else 1.0) * M_e
+    if variant not in ("zeropp", "hpz"):
+        # nested-remat re-gather of the expert chunks stays on the
+        # forward (qwZ) tier when there is no secondary copy to replay
+        b["slow"] += (0.5 if qw else 1.0) * M_e
     return b
 
 
@@ -202,6 +284,20 @@ def main():
                 fo = model_tflops(n_ac, tokens, to)
                 print(f"{tokens},{bw_name},{variant},{ratio:.2f},"
                       f"{fs:.2f},{fo:.2f},{ts_ / to:.2f}x")
+
+    print("# Ring-depth projection: step time vs prefetch depth "
+          "(18B, 2K tokens/dev; latency-amortization regime)")
+    print("bandwidth,variant,break_even_depth,"
+          + ",".join(f"d{d}_tflops" for d in (0, 1, 2, 4)))
+    n_dev = 18e9 / 384
+    for bw_name, bw in SLOW_BWS.items():
+        for variant in ("baseline", "zeropp"):
+            cols = []
+            for d in (0, 1, 2, 4):
+                t = step_time_ring(n_dev, 2048, variant, bw, d)
+                cols.append(f"{model_tflops(n_dev, 2048, t):.2f}")
+            be = break_even_depth(n_dev, 2048, variant, bw)
+            print(f"{bw_name},{variant},{be}," + ",".join(cols))
 
     print(f"# Prefetch projection: overlapped (f={MEASURED_OVERLAP:.2f} "
           f"measured, see core/schedule.py) vs synchronous schedule")

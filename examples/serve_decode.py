@@ -58,6 +58,10 @@ def main():
     ap.add_argument("--from-ckpt", action="store_true",
                     help="roundtrip params through an INT8 per-shard "
                          "checkpoint and boot the engine from it")
+    ap.add_argument("--prefetch", type=int, default=None,
+                    help="weight-gather ring depth for the serving path "
+                         "(k>1 pays on slow interconnects; clamps to "
+                         "n_layers-1; default: the policy's depth)")
     args = ap.parse_args()
 
     mesh = make_mesh((2, 2), ("data", "model"))
@@ -72,7 +76,7 @@ def main():
               for k, v in params.items()}
 
     kw = dict(n_slots=args.slots, kv_len=args.kv_len,
-              batch_axes=(), kv_axes=("model",))
+              batch_axes=(), kv_axes=("model",), prefetch=args.prefetch)
     if args.from_ckpt:
         d = tempfile.mkdtemp(prefix="zeropp_serve_ckpt_")
         st = ZeroState(model, mesh, opt_cfg=None, params=params,

@@ -70,12 +70,35 @@ class ZeroConfig:
     # mesh mapping
     dp_axes: Tuple[str, ...] = ("data", "model")  # full ZeRO world
     intra_axis: str = "model"  # fast tier: hpZ secondary group, qgZ intra hop
-    # schedule (core/schedule.py): layers of weight-gather lookahead in the
-    # block scans.  1 = double-buffered prefetch (gathers/reduces overlap
-    # the neighbouring layer's compute); 0 = fully synchronous collectives
-    # on the critical path (the baseline this repo started from).  Both
-    # schedules are bit-exact in loss; only the overlap structure differs.
+    # schedule (core/schedule.py): layers/chunks of weight-gather lookahead
+    # in the block scans — the prefetch-RING depth.  0 = fully synchronous
+    # collectives on the critical path (the reference schedule); 1 = the
+    # double-buffered schedule (gather for step i+1 under step i's
+    # compute); k>1 = a ring of k gathered buffers, step i+k's gather in
+    # flight under step i's compute and qgZ reduces retired k steps
+    # behind (low-bandwidth interconnects, where one step's compute
+    # cannot cover a full gather).  Every depth is bit-exact in loss AND
+    # gradients; only the overlap structure differs.  Negative values are
+    # rejected; depths beyond a scan's length clamp to n-1 per scan
+    # (see effective_prefetch).
     prefetch: int = 1
+
+    def __post_init__(self):
+        if self.prefetch < 0:
+            raise ValueError(
+                f"ZeroConfig.prefetch must be >= 0 (ring depth), got "
+                f"{self.prefetch}")
+
+    def effective_prefetch(self, n: int) -> int:
+        """Usable ring depth for an ``n``-step scan.
+
+        A ring deeper than n-1 would re-gather a buffer still live in the
+        ring (the modular prefetch index laps the consumer), so depth
+        clamps to n-1; local mode and single-step scans are synchronous.
+        """
+        if not self.distributed or n < 2:
+            return 0
+        return min(self.prefetch, n - 1)
     # numerics
     param_dtype: jnp.dtype = jnp.bfloat16
     compute_dtype: jnp.dtype = jnp.bfloat16

@@ -284,6 +284,14 @@ def lower_cell(arch_name: str, shape_name: str, multi_pod: bool,
         "policy_note": pol.note, "variant": variant,
         "hpz_axes": pol.zcfg.secondary_axes if pol.zcfg.hpz else None,
     }
+    # ring depth actually in effect per scan (clamped to n-1; anything
+    # beyond it would silently lap the ring — see ZeroConfig.prefetch)
+    eff = {"layers": pol.zcfg.effective_prefetch(model.n_periods)}
+    if model.is_moe:
+        eff["expert_chunks"] = pol.zcfg.effective_prefetch(
+            arch.expert_chunks)
+    info["prefetch"] = pol.zcfg.prefetch
+    info["prefetch_effective"] = eff
 
     info["kind"] = shape.kind
     if accum == 0 and shape.kind == "train":
@@ -430,7 +438,7 @@ def analyze(lowered, info: Dict[str, Any], multi_pod: bool) -> Dict[str, Any]:
     # ---- schedule overlap (prefetch verification, see hlo_analysis) -------
     from repro.launch.hlo_analysis import analyze_overlap
     try:
-        info["overlap"] = analyze_overlap(hlo_text)
+        info["overlap"] = analyze_overlap(hlo_text, multi_pod)
     except Exception as e:  # pragma: no cover
         info["overlap"] = {"error": repr(e)}
     info.pop("jaxpr_analysis", None)  # folded into cost/collectives/memory
@@ -585,15 +593,21 @@ def main():
     print(f"  useful_flops_ratio={r['useful_flops_ratio']:.3f} "
           f"mfu_bound={r['mfu_bound']:.3f} "
           f"compile={info.get('compile_s')}s")
+    if "prefetch" in info:
+        print(f"  schedule: prefetch={info['prefetch']} "
+              f"effective={info['prefetch_effective']}")
     ov = info.get("overlap", {})
     if "overlap_fraction" in ov:
         loops = ov.get("per_loop", {})
         nested = sum(1 for d in loops.values()
                      if d.get("outer_mult", 1.0) > 1.0)
+        slack = max((d.get("max_slack_iters", 1) for d in loops.values()),
+                    default=1)
         print(f"  overlap: fraction={ov['overlap_fraction']:.3f} "
               f"({ov['overlappable_collectives']}/{ov['in_loop_collectives']}"
               f" in-loop collectives over {len(loops)} loops, {nested} "
-              f"nested; async pairs={ov['async_pairs']})")
+              f"nested; max ring slack={slack} iters; "
+              f"async pairs={ov['async_pairs']})")
 
 
 if __name__ == "__main__":

@@ -482,6 +482,19 @@ def estimate_peak_bytes(text: str) -> float:
 # layer scan) are weighted by their enclosing trip-count product, and a
 # loop body with no compute at all (gather-only remat loops) exposes its
 # collectives — see _body_overlap / _loop_multipliers.
+#
+# Ring-depth accounting: the depth-k prefetch ring (core/schedule.py)
+# inserts each gather's result into a (k, ...) carried ring buffer, so the
+# value is not consumed for k iterations — the gather is credited against
+# k iterations of compute, not one.  ``slack_iters`` is read off the HLO
+# structurally (the leading dim of the ring buffer the collective's result
+# is dynamic-update-sliced into; 1 when no ring is found), and
+# :func:`effective_overlap` turns (slack, per-iteration flops, wire bytes)
+# into a wall-clock-model overlap fraction at an explicit operating point
+# (peak flops, per-tier bandwidth, per-collective latency): structure says
+# which bytes CAN move under compute, the operating point says which bytes
+# FIT.  Depth k>1 strictly increases the fit when one iteration's compute
+# cannot cover a gather — the low-bandwidth regime the ring exists for.
 
 
 def _fusion_has_dot(comps, name: str, memo: Dict[str, bool],
@@ -517,8 +530,57 @@ def _is_compute(comps, ins: Instr, memo: Dict[str, bool]) -> bool:
     return False
 
 
-def _body_overlap(comps, body: str, fus_memo: Dict[str, bool]
-                  ) -> List[Dict]:
+def _ring_slack(by_name: Dict[str, "Instr"], users: Dict[str, List[str]],
+                ins: "Instr") -> int:
+    """Iterations of compute a collective's result can hide under.
+
+    The depth-k ring schedule dynamic-update-slices each prefetched buffer
+    into a (k, ...) ring carried by the loop, so the value is first READ k
+    iterations after the gather was issued.  Walk the collective's user
+    chain (through dequantize fusions / converts / reshapes, which keep
+    the leading shape) until an op inserts it into a buffer with one extra
+    leading dim — that dim is the ring depth.  No ring found (the value is
+    consumed directly, e.g. the classic double buffer's bare carry or a
+    synchronous gather) = 1.
+    """
+    shapes = _first_type_dims(ins.type_str)
+    if not shapes:
+        return 1
+    base = shapes[0][1]
+    seen, stack = set(), [ins.name]
+    while stack:
+        cur = stack.pop()
+        for u in users.get(cur, []):
+            if u in seen:
+                continue
+            seen.add(u)
+            ui = by_name.get(u)
+            if ui is None:
+                continue
+            udims_list = _first_type_dims(ui.type_str)
+            if not udims_list:
+                continue
+            udims = udims_list[0][1]
+            if (ui.opcode in ("dynamic-update-slice", "fusion")
+                    and len(udims) == len(base) + 1 and udims[1:] == base
+                    and udims[0] >= 1):
+                return udims[0]
+            stack.append(u)
+    return 1
+
+
+def _body_flops(comps, body: str, memo: Dict[str, float]) -> float:
+    """Per-iteration matmul flops of one while body (nested loops counted
+    at their trip counts — one outer iteration runs them in full)."""
+    if body not in memo:
+        t = Totals()
+        _walk(comps, body, 1.0, t, False, 1, {})
+        memo[body] = t.flops
+    return memo[body]
+
+
+def _body_overlap(comps, body: str, fus_memo: Dict[str, bool],
+                  multi_pod: bool = False) -> List[Dict]:
     """Classify each collective in one while body as overlappable or
     exposed, by within-iteration dependence on matmul compute.
 
@@ -585,7 +647,10 @@ def _body_overlap(comps, body: str, fus_memo: Dict[str, bool]
                         and not reaches_compute_down(ins.name)
                         and not derives_from_compute_up(ins.name))
         out.append({"op": base, "name": ins.name, "wire_bytes": wire,
-                    "overlappable": overlappable})
+                    "overlappable": overlappable,
+                    "tier": _group_tier(groups, multi_pod),
+                    "slack_iters": _ring_slack(by_name, users, ins)
+                    if overlappable else 1})
     return out
 
 
@@ -669,8 +734,10 @@ def _entry_name(text: str, comps) -> Optional[str]:
     return max(comps, key=lambda k: len(comps[k])) if comps else None
 
 
-def analyze_overlap(text: str) -> Dict:
+def analyze_overlap(text: str, multi_pod: bool = False) -> Dict:
     """Overlap metrics for a compiled HLO module (see block comment above).
+    ``multi_pod`` feeds the tier classifier so cross-pod collectives are
+    priced at the pod tier by :func:`effective_overlap`.
 
     Returns:
       in_loop_wire_bytes      — Σ wire bytes of collectives in while bodies
@@ -686,6 +753,7 @@ def analyze_overlap(text: str) -> Dict:
     """
     comps = parse_module(text)
     fus_memo: Dict[str, bool] = {}
+    flop_memo: Dict[str, float] = {}
     entry = _entry_name(text, comps)
     mults = _loop_multipliers(comps, entry) if entry else {}
     per_loop = {}
@@ -700,7 +768,7 @@ def analyze_overlap(text: str) -> Dict:
             if not body or body in per_loop:
                 continue
             trips = _trip_count(comps, cond) if cond else 1
-            colls = _body_overlap(comps, body, fus_memo)
+            colls = _body_overlap(comps, body, fus_memo, multi_pod)
             if not colls:
                 continue
             mult = mults.get(body, 1.0)
@@ -714,6 +782,13 @@ def analyze_overlap(text: str) -> Dict:
                 "overlappable": sum(c["overlappable"] for c in colls),
                 "wire_bytes": wire,
                 "overlapped_wire_bytes": over,
+                "has_compute": bool(_body_flops(comps, body, flop_memo)),
+                "flops_per_iter": _body_flops(comps, body, flop_memo),
+                "max_slack_iters": max(c["slack_iters"] for c in colls),
+                "colls": [{k: c[k] for k in ("op", "wire_bytes",
+                                             "overlappable", "tier",
+                                             "slack_iters")}
+                          for c in colls],
             }
             total += wire
             overlapped += over
@@ -729,4 +804,66 @@ def analyze_overlap(text: str) -> Dict:
         "per_loop": per_loop,
         "async_pairs": pairs,
         "async_pairs_enclosing_compute": enclosing,
+    }
+
+
+# ---------------------------------------------------------------------------
+# depth-credited (wall-clock-model) overlap at an operating point
+# ---------------------------------------------------------------------------
+
+# the canonical low-bandwidth operating point for ring measurements
+# (checks.check_ring_overlap_depth, benchmarks/overlap_bench.py): ALL
+# tiers priced at the slow interconnect.  On the <=16-device smoke meshes
+# _group_tier's replica-group classification is degenerate (everything
+# reads as the fast tier), so uniform pricing is the only honest way to
+# measure the slow-interconnect regime there; per-tier bandwidths belong
+# to real multi-node meshes.
+RING_OPERATING_POINT = {
+    "peak_flops": 197e12,                       # bf16 flop/s per chip
+    "tier_bw": {"model": 12.5e9, "data": 12.5e9, "pod": 12.5e9},  # 1 IB
+    "coll_latency_s": 20e-6,
+}
+
+
+def effective_overlap(ov: Dict, *, peak_flops: float,
+                      tier_bw: Dict[str, float],
+                      coll_latency_s: float = 0.0) -> Dict:
+    """Ring-depth-credited overlap fraction at an explicit operating point.
+
+    ``overlap_fraction`` (structural) says which in-loop wire bytes CAN be
+    scheduled under compute; this model says which bytes FIT: a collective
+    issued d iterations early (``slack_iters`` — the ring depth read off
+    the HLO) has a window of d iterations of body compute to complete in,
+
+        t_window = min(d, trips) · flops_per_iter / peak_flops
+        t_comm   = coll_latency_s + wire / tier_bw[tier]
+        hidden   = wire · min(1, t_window / t_comm)
+
+    Exposed (structurally dependent) collectives hide nothing.  The
+    fraction is monotone in ring depth and coincides with the structural
+    fraction when every overlappable collective fits its window —
+    ``prefetch=2`` beats ``prefetch=1`` exactly in the regime where one
+    iteration's compute cannot cover a gather (slow interconnects, small
+    decode batches).  ``ov`` is an :func:`analyze_overlap` result.
+    """
+    total = hidden = 0.0
+    for loop in ov["per_loop"].values():
+        weight = loop["trip_count"] * loop["outer_mult"]
+        t_iter = loop["flops_per_iter"] / peak_flops
+        for c in loop["colls"]:
+            wire = c["wire_bytes"] * weight
+            total += wire
+            if not c["overlappable"] or c["wire_bytes"] <= 0:
+                continue
+            bw = tier_bw.get(c["tier"], min(tier_bw.values()))
+            t_comm = coll_latency_s + c["wire_bytes"] / bw
+            window = min(c["slack_iters"], loop["trip_count"]) * t_iter
+            hidden += wire * (1.0 if t_comm <= 0.0
+                              else min(1.0, window / t_comm))
+    return {
+        "effective_overlap_fraction": (hidden / total) if total else 0.0,
+        "hidden_wire_bytes": hidden,
+        "in_loop_wire_bytes": total,
+        "operating_point": {"peak_flops": peak_flops, "tier_bw": tier_bw,
+                            "coll_latency_s": coll_latency_s},
     }

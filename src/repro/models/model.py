@@ -19,6 +19,7 @@ from jax import lax
 from repro.configs.base import ArchConfig
 from repro.core.partition import ParamSpec
 from repro.core.schedule import (zero_apply_scan, zero_chunk_scan,
+                                 zero_chunk_scan_hpz,
                                  zero_chunk_scan_inference,
                                  zero_scan_inference)
 from repro.core.zeropp import ZeroConfig, zero_apply, zero_apply_inference
@@ -34,6 +35,17 @@ Array = jax.Array
 
 def _inv_softplus(y):
     return float(np.log(np.expm1(y)))
+
+
+def _spec_chunk0(xs, i):
+    """Speculative-gather source for the MoE layer ring: layer ``i``'s
+    FIRST expert-chunk primary shard (routing-ahead dispatch — experts
+    are gathered in full regardless of routing, so the gather can issue
+    under earlier layers' compute).  ``xs`` is the layer scan's stacked
+    inputs: the expert stack itself (train/prefill) or (experts, caches)
+    (decode)."""
+    eflat = xs[0] if isinstance(xs, tuple) else xs
+    return lax.dynamic_index_in_dim(eflat, i, axis=0, keepdims=False)[0]
 
 
 class Model:
@@ -85,6 +97,16 @@ class Model:
 
         self.n_moe_layers = sum(1 for k in period for _ in [0] if k == "moe") \
             * self.n_periods + sum(1 for k in period[: self.rem] if k == "moe")
+
+    def with_prefetch(self, k: int) -> "Model":
+        """A shallow copy of this model with ring depth ``k`` (layer AND
+        chunk scans).  Specs are shared (immutable); only the schedule
+        changes — serving uses this to deepen the decode-path ring on
+        slow interconnects without rebuilding the model."""
+        import copy
+        m = copy.copy(self)
+        m.zcfg = dataclasses.replace(self.zcfg, prefetch=k)
+        return m
 
     def _auto_unemb_chunks(self, target_bytes: int = 512 * 2 ** 20) -> int:
         cfg = self.cfg
@@ -225,31 +247,45 @@ class Model:
     # ----------------------------------------------------------- moe layer
 
     def _moe_layer(self, rs: RunSpec, train: bool, W, eflat, h, cos, sin,
-                   cache_pos, cache):
+                   cache_pos, cache, W_spec=None, sec=None,
+                   collect_sec: bool = False):
         """One MoE layer given the layer's already-gathered shared weights.
 
         The LAYER-level engine (zero_apply_scan for training,
         zero_scan_inference for serving) owns the shared-param gather: with
-        ``prefetch>=1`` layer i+1's qwZ gather is in flight under this
-        layer's routing/expert compute, and in backward the hpZ gather /
-        qgZ reduce of the shared params are prefetched/pipelined exactly
-        like a dense block.  Inside the layer:
+        ``prefetch=k>=1`` layer i+k's qwZ gather is in flight under this
+        layer's routing/expert compute, and in backward the hpZ gathers /
+        qgZ reduces of the shared params ride the mirrored reverse ring
+        exactly like a dense block.  Inside the layer:
 
           pre     (gathered): attn + ln2 + router logits + shared experts
           dispatch (pure):    sort-based token->slot routing, indices only
           chunks  (nc-deep zero_chunk_scan): each chunk rebuilds its slot
                               buffer from the token activations and runs
-                              the grouped GEMMs; chunk c+1's expert-weight
+                              the grouped GEMMs; chunk c+k's expert-weight
                               gather is issued under chunk c's expert_ffn
                               (prefetch=0: synchronous per-chunk gathers)
           combine (pure):     gated scatter back to tokens
 
-        Routing stays on the critical path — chunk 0's gather cannot start
-        earlier than dispatch because the chunk scan consumes disp indices
-        — but every expert-weight byte after it is double-buffered.
+        Three engine-owned hooks (see core/schedule.py, DESIGN.md §3):
+
+          * ``W_spec`` — layer chunk 0's expert weights, pre-gathered by
+            the outer ring under the PREVIOUS layers' compute (routing-
+            ahead dispatch: experts are gathered in full regardless of
+            routing, so the gather need not wait for the router).  Chunk 0
+            seeds the chunk ring from it; without it, dispatch gates the
+            first gather.  Every expert-weight byte after chunk 0 is
+            ring-buffered either way.
+          * ``collect_sec`` — also return the stack of per-chunk secondary
+            (hpZ) shards, to be threaded through the outer scan's
+            residuals.
+          * ``sec`` — a saved secondary stack: the chunk pipeline replays
+            from it on the hpZ fast tier (zero_chunk_scan_hpz) instead of
+            re-gathering on qwZ — the nested-recompute path.
+
         Keeping only (h, hn2, indices) as inter-gather values bounds the
         per-layer activation residual to O(T·d), not O(T·k·capacity·d).
-        Returns (h_out, new_cache, aux_loss).
+        Returns (h_out, new_cache, aux_loss, sec_stack-or-None).
         """
         cfg, z = self.cfg, self.zcfg
         B, S = h.shape[0], h.shape[1]
@@ -283,14 +319,42 @@ class Model:
                                           chunk_slots)
             return out * g.reshape(Ec, disp.cap, 1).astype(out.dtype)
 
-        cs = zero_chunk_scan(chunk_f, z) if train \
-            else zero_chunk_scan_inference(chunk_f, z)
-        outs = cs(eflat, jnp.arange(nc, dtype=jnp.int32),
-                  hn2, disp.dest, disp.src_tok, disp.g_sorted)
+        cidx = jnp.arange(nc, dtype=jnp.int32)
+        sec_out = None
+        if not train:
+            outs = zero_chunk_scan_inference(chunk_f, z)(
+                eflat, cidx, hn2, disp.dest, disp.src_tok, disp.g_sorted,
+                W0=W_spec)
+        elif sec is not None:
+            # nested recompute: replay the chunk pipeline from the saved
+            # secondary shards — every gather on the hpZ fast tier
+            outs = zero_chunk_scan_hpz(chunk_f, z)(
+                eflat, sec, cidx, hn2, disp.dest, disp.src_tok,
+                disp.g_sorted)
+        elif collect_sec:
+            outs, sec_out = zero_chunk_scan(chunk_f, z,
+                                            collect_secondary=True)(
+                eflat, cidx, hn2, disp.dest, disp.src_tok, disp.g_sorted,
+                W0=W_spec)
+        else:
+            outs = zero_chunk_scan(chunk_f, z)(
+                eflat, cidx, hn2, disp.dest, disp.src_tok, disp.g_sorted,
+                W0=W_spec)
         y = moe_lib.moe_combine(outs.reshape(cfg.n_experts, disp.cap, d),
                                 disp)
         h3 = h2 + shared_y + y.reshape(B, S, d).astype(h2.dtype)
-        return h3, new_cache, disp.aux_loss
+        return h3, new_cache, disp.aux_loss, sec_out
+
+    def _moe_inference_scan(self, moe_f):
+        """Layer scan for the serving MoE stack: routing-ahead speculative
+        chunk-0 gather when the chunk ring can be seeded from it (nc >= 2,
+        prefetched), plain scan otherwise.  ``moe_f(W, W_spec, h, x,
+        *bargs)`` always takes the speculative buffer (None when off)."""
+        z = self.zcfg
+        if z.effective_prefetch(self.cfg.expert_chunks) >= 1:
+            return zero_scan_inference(moe_f, z, spec=_spec_chunk0)
+        return zero_scan_inference(
+            lambda W, h, x, *b: moe_f(W, None, h, x, *b), z)
 
     # ------------------------------------------------------------------ train
 
@@ -319,16 +383,43 @@ class Model:
             return h, aux
 
         if self.is_moe:
-            # the same prefetched layer scan as the dense stack: layer
-            # i+1's SHARED-param gather rides under layer i's routing +
-            # expert compute, and the expert-chunk stack flows through xs
-            # into each layer's own zero_chunk_scan pipeline
+            # the same ring-prefetched layer scan as the dense stack:
+            # layer i+k's SHARED-param gather rides under layer i's
+            # routing + expert compute, and the expert-chunk stack flows
+            # through xs into each layer's own zero_chunk_scan pipeline.
+            # Two ring-only knobs (core/schedule.py): spec pre-gathers
+            # layer i+k's chunk-0 expert weights (routing-ahead
+            # dispatch), and with hpZ the chunk secondary shards thread
+            # through the outer residuals so the nested remat replays
+            # chunk gathers on the fast tier (f_fwd/f_bwd).
+            hpz_remat = z.hpz and z.distributed
+            # the speculative gather only pays when the chunk ring can be
+            # seeded from it (nc >= 2, prefetched); with a single chunk
+            # the sync chunk path would re-gather and the speculation
+            # would be pure wasted wire bytes
+            spec = _spec_chunk0 \
+                if z.effective_prefetch(cfg.expert_chunks) >= 1 else None
+
             def moe_f(W, h, eflat, cos, sin):
-                h2, _, aux = self._moe_layer(rs, True, W, eflat, h,
-                                             cos, sin, None, None)
+                h2, _, aux, _ = self._moe_layer(rs, True, W, eflat, h,
+                                                cos, sin, None, None)
                 return h2, aux
 
-            ap = zero_apply_scan(moe_f, z)
+            def moe_f_fwd(W, W_spec, h, eflat, cos, sin):
+                h2, _, aux, sec = self._moe_layer(
+                    rs, True, W, eflat, h, cos, sin, None, None,
+                    W_spec=W_spec, collect_sec=hpz_remat)
+                return h2, aux, sec
+
+            def moe_f_bwd(W, h, eflat, sec, cos, sin):
+                h2, _, aux, _ = self._moe_layer(
+                    rs, True, W, eflat, h, cos, sin, None, None, sec=sec)
+                return h2, aux
+
+            ap = zero_apply_scan(
+                moe_f, z, f_fwd=moe_f_fwd,
+                f_bwd=moe_f_bwd if hpz_remat else None,
+                spec=spec)
             h, auxs = ap(params["blocks"], h, params["experts"], cos, sin)
         else:
             # prefetched (z.prefetch>=1) or synchronous (0) block scan —
@@ -460,12 +551,13 @@ class Model:
         if self.is_moe:
             cos, sin = pos["rope"]
 
-            def moe_f(W, h, eflat, cos, sin):
-                h2, c, _ = self._moe_layer(rs, False, W, eflat, h,
-                                           cos, sin, None, None)
+            def moe_f(W, W_spec, h, eflat, cos, sin):
+                h2, c, _, _ = self._moe_layer(rs, False, W, eflat, h,
+                                              cos, sin, None, None,
+                                              W_spec=W_spec)
                 return h2, (c,)
 
-            ap = zero_scan_inference(moe_f, z)
+            ap = self._moe_inference_scan(moe_f)
             h, caches = ap(params["blocks"], h, params["experts"], cos, sin)
         else:
             ap = zero_scan_inference(
@@ -520,13 +612,14 @@ class Model:
         if self.is_moe:
             cos, sin = pos["rope"]
 
-            def moe_f(W, h, x, cos, sin, cache_pos):
+            def moe_f(W, W_spec, h, x, cos, sin, cache_pos):
                 eflat, cache = x
-                h2, c, _ = self._moe_layer(rs, False, W, eflat, h,
-                                           cos, sin, cache_pos, cache[0])
+                h2, c, _, _ = self._moe_layer(rs, False, W, eflat, h,
+                                              cos, sin, cache_pos,
+                                              cache[0], W_spec=W_spec)
                 return h2, (c,)
 
-            ap = zero_scan_inference(moe_f, z)
+            ap = self._moe_inference_scan(moe_f)
             h, new_caches = ap(
                 params["blocks"], h,
                 (params["experts"], caches["blocks"]), cos, sin,

@@ -28,10 +28,15 @@ class Dispatch(NamedTuple):
 
     Splitting dispatch from expert compute lets the ZeRO++ engine gather
     expert weights in CHUNKS (a zero_chunk_scan over the stacked chunk
-    shards: chunk c+1's gather in flight under chunk c's grouped GEMMs,
-    prefetch=0 falling back to one synchronous zero_apply per chunk) — the
-    analogue of DeepSpeed's per-module gather granularity, without which a
-    128-expert layer would materialize multi-GB gathered weight buffers.
+    shards: chunk c+k's gather in flight under chunk c's grouped GEMMs
+    for ring depth k = ZeroConfig.prefetch, prefetch=0 falling back to
+    one synchronous zero_apply per chunk) — the analogue of DeepSpeed's
+    per-module gather granularity, without which a 128-expert layer would
+    materialize multi-GB gathered weight buffers.  Chunk 0 itself can be
+    seeded from the layer ring's speculative gather (routing-ahead
+    dispatch, core/schedule.py `spec`): experts are gathered in full
+    regardless of routing, so only the indices — not the first gather —
+    wait on the router.
 
     Only INDICES are stored (not the (E, cap, d) slot buffer): each chunk
     rebuilds its slice of the buffer from the token activations inside its

@@ -28,6 +28,10 @@ Weights stay ZeRO-sharded across the whole mesh and move through the same
 qwZ INT8 block-quantized all-gather as training's forward (paper §
 quantized weight communication) — ``from_checkpoint`` boots from the
 per-shard INT8 checkpoint format (ZeroState) via the bf16 serving path.
+``prefetch=k`` deepens the per-layer weight-gather ring of both steps
+(core/schedule.py): on slow interconnects, where a decode step's compute
+cannot cover one layer's gather, k>1 layers of lookahead keeps the
+pipeline fed (benchmarks/throughput_model.py models the break-even k).
 
 Greedy decoding through the engine is bit-identical to running each
 request alone through the raw prefill+decode steps: per-row ops (matmuls,
@@ -70,8 +74,15 @@ class ServeEngine:
                  batch_axes: Tuple[str, ...] = (),
                  kv_axes: Tuple[str, ...] = ("model",),
                  scheduler: Optional[FIFOScheduler] = None,
-                 cache_dtype=None, donate: bool = True):
+                 cache_dtype=None, donate: bool = True,
+                 prefetch: Optional[int] = None):
         cfg = model.cfg
+        if prefetch is not None:
+            # deepen the weight-gather ring for the whole serving path:
+            # decode batches are small, so on slow interconnects one
+            # layer's compute cannot cover a gather — k>1 layers of
+            # lookahead keeps the pipeline fed (core/schedule.py)
+            model = model.with_prefetch(prefetch)
         if cfg.embed_inputs or cfg.mrope:
             raise ValueError(
                 "ServeEngine drives token-in models; embed/M-RoPE frontends "

@@ -3,9 +3,11 @@
 The engine consumes prefill/decode steps and cache specs from here;
 ``repro.train.serve`` remains the implementation (shard_map step builders
 over the ZeRO-sharded parameter layout — with qwZ the per-layer weight
-gathers move INT8).  See DESIGN.md §5 for the ownership split: the engine
-owns slots and scheduling, this layer owns step/sharding specs, ZeroState
-owns parameters.
+gathers move INT8; both builders take ``prefetch=k`` to deepen the
+weight-gather ring for slow interconnects, see core/schedule.py).  See
+DESIGN.md §5 for the ownership split: the engine owns slots and
+scheduling, this layer owns step/sharding specs, ZeroState owns
+parameters.
 """
 from repro.train.serve import (  # noqa: F401
     ServeStep,

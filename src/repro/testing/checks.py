@@ -731,7 +731,7 @@ def check_dryrun_smoke_cell():
 # ---------------------------------------------------------------------------
 
 def _prefetch_env(prefetch: int, variant: str = "zeropp", batch: int = 16,
-                  arch_name: str = "gpt-350m"):
+                  arch_name: str = "gpt-350m", n_layers: int = 0):
     import jax
     from repro.configs import get_config
     from repro.data.synthetic import SyntheticLM
@@ -743,7 +743,10 @@ def _prefetch_env(prefetch: int, variant: str = "zeropp", batch: int = 16,
 
     mesh = _mesh2(model=2)
     axes = tuple(mesh.axis_names)
-    arch = get_config(arch_name).reduced()
+    # n_layers>0 deepens the stack beyond the 2-layer reduced default so
+    # ring depths >= 2 are real (effective_prefetch clamps to n-1)
+    arch = get_config(arch_name).reduced(
+        **({"n_layers": n_layers} if n_layers else {}))
     pol = make_policy(arch, axes, variant, prefetch=prefetch)
     model = Model(arch, pol.zcfg, world=jax.device_count())
     opt_cfg = AdamWConfig(lr=warmup_cosine(3e-3, 10, 10_000),
@@ -765,11 +768,12 @@ def _abstract_tree(tree, mesh, specs):
     return jax.tree.map(mk, tree, specs)
 
 
-def _prefetch_abstract_args(pf: int, arch_name: str = "gpt-350m"):
+def _prefetch_abstract_args(pf: int, arch_name: str = "gpt-350m",
+                            n_layers: int = 0):
     """(ts, abstract (params, opt, batch)) for a prefetch setting."""
     from repro.train import trainer as trainer_lib
     mesh, arch, model, opt_cfg, ts, lm = _prefetch_env(
-        pf, arch_name=arch_name)
+        pf, arch_name=arch_name, n_layers=n_layers)
     p_sh, o_sh = trainer_lib.state_shapes(model, opt_cfg)
     params = _abstract_tree(p_sh, mesh, ts.in_specs[0])
     opt = _abstract_tree(o_sh, mesh, ts.in_specs[1])
@@ -920,15 +924,15 @@ def check_prefetch_overlap_fraction():
     assert ov[0]["overlappable_collectives"] == 0, ov[0]
 
 
-def _moe_loss_and_grads(pf: int):
-    """(psum loss, grad pytree as numpy) for the tiny MoE stack at one
-    prefetch setting — fresh init, fixed seed, one fixed batch."""
+def _stack_loss_and_grads(pf: int, arch_name: str, n_layers: int = 0):
+    """(psum loss, grad pytree as numpy) for a tiny stack at one prefetch
+    setting — fresh init, fixed seed, one fixed batch."""
     import jax
     from repro.data.synthetic import make_batch
     from repro.train.trainer import init_state, place_batch
 
     mesh, arch, model, opt_cfg, ts, lm = _prefetch_env(
-        pf, arch_name="deepseek-moe-16b")
+        pf, arch_name=arch_name, n_layers=n_layers)
     params, _ = init_state(model, mesh, opt_cfg, jax.random.PRNGKey(0))
     host = make_batch(arch, lm, 0, 16)
     b = place_batch(host, mesh, ts.in_specs[2])
@@ -947,6 +951,81 @@ def _moe_loss_and_grads(pf: int):
                    out_specs=(P(), ts.in_specs[0]), check_vma=False)
     loss, grads = jax.jit(sm)(params, b)
     return float(loss), {k: np.asarray(v) for k, v in grads.items()}
+
+
+def _moe_loss_and_grads(pf: int):
+    return _stack_loss_and_grads(pf, "deepseek-moe-16b")
+
+
+def _assert_depth_sweep(arch_name: str, depths, n_layers: int = 4):
+    """Losses AND gradients at every ring depth must be bit-identical to
+    the synchronous (prefetch=0) reference."""
+    l0, g0 = _stack_loss_and_grads(0, arch_name, n_layers)
+    for pf in depths:
+        l, g = _stack_loss_and_grads(pf, arch_name, n_layers)
+        assert l == l0, (arch_name, pf, l, l0)
+        for k in g0:
+            assert np.array_equal(g0[k], g[k]), (
+                f"{arch_name} prefetch={pf}: grad {k} differs from the "
+                f"synchronous reference, max abs diff "
+                f"{np.abs(g0[k].astype(np.float64) - g[k].astype(np.float64)).max()}")
+
+
+def check_prefetch_depth_sweep():
+    """Dense 4-layer stack: the depth-k ring is bit-exact to the
+    synchronous reference at every depth — including 8 > n_layers, which
+    must clamp to the ring's n-1 maximum rather than lap itself."""
+    _assert_depth_sweep("gpt-350m", (1, 2, 3, 8))
+
+
+def check_moe_prefetch_depth_sweep():
+    """MoE 4-layer stack (chunk + layer rings, routing-ahead speculative
+    chunk-0 gather, hpZ-residual nested recompute): bit-exact to the
+    synchronous reference at every ring depth, including one beyond the
+    layer count (clamp case)."""
+    _assert_depth_sweep("deepseek-moe-16b", (1, 2, 3, 8))
+
+
+def check_ring_overlap_depth():
+    """The ring acceptance check, from compiled HLO on 4-layer stacks:
+
+      * prefetch=2 yields strictly higher depth-credited
+        (effective_overlap) overlap than prefetch=1 on BOTH the dense and
+        the MoE stack at the canonical low-bandwidth operating point
+        (hlo_analysis.RING_OPERATING_POINT), with the structural fraction
+        no lower and ring slack 2 visible in the HLO;
+      * the MoE nested-remat expert re-gather is no longer exposed: every
+        loop body holding collectives also holds compute (the gather-only
+        loop the old qwZ-tier recompute left behind is gone), and the
+        structural MoE fraction clears the pre-hpZ-recompute 0.63.
+    """
+    from repro.launch.hlo_analysis import (RING_OPERATING_POINT,
+                                           analyze_overlap,
+                                           effective_overlap)
+
+    for arch in ("gpt-350m", "deepseek-moe-16b"):
+        ov = {}
+        for pf in (1, 2):
+            ts, args = _prefetch_abstract_args(pf, arch_name=arch,
+                                               n_layers=4)
+            txt = ts.fn.lower(*args).compile().as_text()
+            ov[pf] = analyze_overlap(txt)
+        assert ov[2]["overlap_fraction"] >= ov[1]["overlap_fraction"], \
+            (arch, ov[1]["overlap_fraction"], ov[2]["overlap_fraction"])
+        e1 = effective_overlap(ov[1], **RING_OPERATING_POINT)
+        e2 = effective_overlap(ov[2], **RING_OPERATING_POINT)
+        f1 = e1["effective_overlap_fraction"]
+        f2 = e2["effective_overlap_fraction"]
+        assert f2 > f1 > 0.0, (arch, f1, f2)
+        slack2 = max(l["max_slack_iters"] for l in ov[2]["per_loop"].values())
+        assert slack2 >= 2, (arch, slack2)
+        for pf in (1, 2):
+            for name, loop in ov[pf]["per_loop"].items():
+                assert loop["has_compute"], (
+                    f"{arch} prefetch={pf}: loop {name} holds collectives "
+                    f"with no compute to hide behind (exposed re-gather)")
+        if arch == "deepseek-moe-16b":
+            assert ov[1]["overlap_fraction"] > 0.7, ov[1]["overlap_fraction"]
 
 
 def check_moe_prefetch_matches_sync():
@@ -973,10 +1052,12 @@ def check_moe_prefetch_matches_sync():
 
 
 def check_moe_prefetch_overlap_fraction():
-    """Compiled-HLO verification of the MoE tentpole (acceptance
+    """Compiled-HLO verification of the MoE schedule (acceptance
     criterion): with prefetch=1 the layer-scan shared gathers AND the
     nested expert-chunk gathers/reduces are schedulable under compute
-    (overlap_fraction > 0.5); with prefetch=0 every in-loop collective
+    (overlap_fraction > 0.7 — the hpZ-residual recompute removed the
+    exposed backward expert re-gather loop, so every in-loop collective
+    body now holds compute); with prefetch=0 every in-loop collective
     stays on the critical path."""
     from repro.launch.hlo_analysis import analyze_overlap
 
@@ -985,9 +1066,13 @@ def check_moe_prefetch_overlap_fraction():
         ts, args = _prefetch_abstract_args(pf, arch_name="deepseek-moe-16b")
         txt = ts.fn.lower(*args).compile().as_text()
         ov[pf] = analyze_overlap(txt)
-    assert ov[1]["overlap_fraction"] > 0.5, ov[1]
+    assert ov[1]["overlap_fraction"] > 0.7, ov[1]
     # nested chunk loops must be seen as loops (layer scan + chunk scans)
     assert len(ov[1]["per_loop"]) >= 2, ov[1]["per_loop"]
+    # the nested-remat expert re-gather no longer shows up as a
+    # gather-only loop of exposed slow-tier bytes
+    for name, loop in ov[1]["per_loop"].items():
+        assert loop["has_compute"], (name, loop)
     assert ov[0]["overlap_fraction"] == 0.0, ov[0]
     assert ov[0]["overlappable_collectives"] == 0, ov[0]
 

@@ -87,15 +87,19 @@ class ServeStep:
 def build_prefill_step(model: Model, mesh,
                        batch_axes: Tuple[str, ...],
                        seq_axes: Tuple[str, ...],
-                       with_last_pos: bool = False) -> ServeStep:
+                       with_last_pos: bool = False,
+                       prefetch: Optional[int] = None) -> ServeStep:
     """Prompt ingestion: (params, batch) -> (last-token logits, caches).
 
     The prefill KV cache inherits the activation layout, so kv_axes ==
     seq_axes by construction.  With ``with_last_pos`` the step takes an
     extra (B,) int32 argument selecting each sequence's logits position —
     the last REAL token of a right-padded prompt (continuous-batching
-    engine, prompt-length buckets).
+    engine, prompt-length buckets).  ``prefetch`` overrides the model's
+    ring depth for this step (see build_decode_step).
     """
+    if prefetch is not None:
+        model = model.with_prefetch(prefetch)
     rs = RunSpec(mode="prefill", seq_axes=tuple(seq_axes),
                  kv_axes=tuple(seq_axes))
     p_specs = param_specs(model, tuple(mesh.axis_names))
@@ -124,7 +128,8 @@ def build_prefill_step(model: Model, mesh,
 def build_decode_step(model: Model, mesh,
                       batch_axes: Tuple[str, ...],
                       kv_axes: Tuple[str, ...],
-                      donate: bool = True) -> ServeStep:
+                      donate: bool = True,
+                      prefetch: Optional[int] = None) -> ServeStep:
     """One-token decode: (params, caches, batch, cache_pos) ->
     (logits, new caches).
 
@@ -132,7 +137,15 @@ def build_decode_step(model: Model, mesh,
     the activations: each row of the batch decodes at its own position, so
     one compiled step serves any mix of in-flight requests (the
     continuous-batching contract, DESIGN.md §5).
+
+    ``prefetch`` overrides the model's ring depth for THIS step: decode
+    batches are small enough that one layer's compute rarely covers a
+    weight gather on a slow interconnect, so gathering k>1 layers ahead
+    pays exactly here (core/schedule.py; depth still clamps to
+    n_layers-1).
     """
+    if prefetch is not None:
+        model = model.with_prefetch(prefetch)
     rs = RunSpec(mode="decode", kv_axes=tuple(kv_axes))
     p_specs = param_specs(model, tuple(mesh.axis_names))
     b_specs = serve_batch_specs(model, batch_axes, ())

@@ -57,10 +57,67 @@ def test_moe_prefetch_loss_and_grads_4dev():
 
 @pytest.mark.slow
 def test_moe_prefetch_overlap_hlo():
-    """Compiled HLO: MoE overlap_fraction > 0.5 with prefetch=1 (both the
-    layer scan and the nested chunk scans), == 0 with prefetch=0."""
+    """Compiled HLO: MoE overlap_fraction > 0.7 with prefetch=1 (layer
+    scan + nested chunk scans, no gather-only remat loop left), == 0 with
+    prefetch=0."""
     run_checks(["check_moe_prefetch_overlap_fraction"], n_devices=8,
                timeout=1200)
+
+
+# ---------------------------------------------------------------------------
+# depth-k prefetch ring (ring schedule, routing-ahead, hpZ nested recompute)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_depth_sweep_dense_8dev():
+    """Dense 4-layer stack on 8 devices: losses AND gradients bit-exact
+    to the synchronous reference at prefetch ∈ {1,2,3} and at 8 >
+    n_layers (ring clamp)."""
+    run_checks(["check_prefetch_depth_sweep"], n_devices=8, timeout=2400)
+
+
+@pytest.mark.slow
+def test_depth_sweep_dense_4dev():
+    run_checks(["check_prefetch_depth_sweep"], n_devices=4, timeout=2400)
+
+
+@pytest.mark.slow
+def test_depth_sweep_moe_8dev():
+    """MoE 4-layer stack (chunk+layer rings, speculative chunk-0 gather,
+    hpZ-residual nested recompute): bit-exact across the same sweep."""
+    run_checks(["check_moe_prefetch_depth_sweep"], n_devices=8,
+               timeout=3600)
+
+
+@pytest.mark.slow
+def test_depth_sweep_moe_4dev():
+    run_checks(["check_moe_prefetch_depth_sweep"], n_devices=4,
+               timeout=3600)
+
+
+@pytest.mark.slow
+def test_ring_overlap_depth():
+    """Acceptance: prefetch=2 strictly beats prefetch=1 in depth-credited
+    overlap on dense AND MoE stacks; the MoE nested-remat re-gather is no
+    longer exposed."""
+    run_checks(["check_ring_overlap_depth"], n_devices=8, timeout=2400)
+
+
+def test_zeroconfig_prefetch_validation():
+    """Negative ring depths are rejected; effective_prefetch clamps to
+    n-1 and degenerates to synchronous for local/single-layer scans."""
+    import jax.numpy as jnp
+    from repro.core.zeropp import ZeroConfig
+
+    with pytest.raises(ValueError):
+        ZeroConfig(prefetch=-1)
+    z = ZeroConfig(prefetch=3)
+    assert z.effective_prefetch(8) == 3
+    assert z.effective_prefetch(4) == 3
+    assert z.effective_prefetch(2) == 1      # clamp to n-1
+    assert z.effective_prefetch(1) == 0      # single step: synchronous
+    assert ZeroConfig.local(prefetch=3).effective_prefetch(8) == 0
+    assert ZeroConfig(prefetch=0).effective_prefetch(8) == 0
 
 
 # ---------------------------------------------------------------------------
@@ -255,3 +312,80 @@ def test_analyze_overlap_async_pairs():
     ov = analyze_overlap(_ASYNC_HLO)
     assert ov["async_pairs"] == 1
     assert ov["async_pairs_enclosing_compute"] == 1
+
+
+# ring-carried gather: the result is dynamic-update-sliced into a (2,64)
+# ring buffer in the carry, so it is consumed two iterations later —
+# slack_iters must read the ring depth off the buffer's leading dim
+_RING2_HLO = """
+HloModule ring2
+
+%cond (p: (s32[], f32[8], f32[2,64], f32[64])) -> pred[] {
+  %p = (s32[], f32[8], f32[2,64], f32[64]) parameter(0)
+  %i = s32[] get-tuple-element((s32[], f32[8], f32[2,64], f32[64]) %p), index=0
+  %n = s32[] constant(4)
+  ROOT %lt = pred[] compare(s32[] %i, s32[] %n), direction=LT
+}
+
+%body (p: (s32[], f32[8], f32[2,64], f32[64])) -> (s32[], f32[8], f32[2,64], f32[64]) {
+  %p = (s32[], f32[8], f32[2,64], f32[64]) parameter(0)
+  %i = s32[] get-tuple-element((s32[], f32[8], f32[2,64], f32[64]) %p), index=0
+  %w = f32[8]{0} get-tuple-element((s32[], f32[8], f32[2,64], f32[64]) %p), index=1
+  %r = f32[2,64]{1,0} get-tuple-element((s32[], f32[8], f32[2,64], f32[64]) %p), index=2
+  %h = f32[64]{0} get-tuple-element((s32[], f32[8], f32[2,64], f32[64]) %p), index=3
+  %g = f32[64]{0} all-gather(f32[8]{0} %w), replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}
+  %gu = f32[1,64]{1,0} reshape(f32[64]{0} %g)
+  %z = s32[] constant(0)
+  %r2 = f32[2,64]{1,0} dynamic-update-slice(f32[2,64]{1,0} %r, f32[1,64]{1,0} %gu, s32[] %z, s32[] %z)
+  %hm = f32[8,8]{1,0} reshape(f32[64]{0} %h)
+  %mm = f32[8,8]{1,0} dot(f32[8,8]{1,0} %hm, f32[8,8]{1,0} %hm), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %h2 = f32[64]{0} reshape(f32[8,8]{1,0} %mm)
+  %one = s32[] constant(1)
+  %i2 = s32[] add(s32[] %i, s32[] %one)
+  ROOT %out = (s32[], f32[8], f32[2,64], f32[64]) tuple(s32[] %i2, f32[8]{0} %w, f32[2,64]{1,0} %r2, f32[64]{0} %h2)
+}
+
+ENTRY %main (a: (s32[], f32[8], f32[2,64], f32[64])) -> (s32[], f32[8], f32[2,64], f32[64]) {
+  %a = (s32[], f32[8], f32[2,64], f32[64]) parameter(0)
+  ROOT %w0 = (s32[], f32[8], f32[2,64], f32[64]) while((s32[], f32[8], f32[2,64], f32[64]) %a), condition=%cond, body=%body
+}
+"""
+
+# the same schedule with a one-slot ring (the classic double buffer)
+_RING1_HLO = _RING2_HLO.replace("ring2", "ring1").replace("2,64", "1,64")
+
+
+def test_ring_slack_detected():
+    ov = analyze_overlap(_RING2_HLO)
+    (loop,) = ov["per_loop"].values()
+    assert loop["has_compute"]
+    assert loop["max_slack_iters"] == 2
+    (coll,) = loop["colls"]
+    assert coll["overlappable"] and coll["slack_iters"] == 2
+    ov1 = analyze_overlap(_RING1_HLO)
+    (loop1,) = ov1["per_loop"].values()
+    assert loop1["max_slack_iters"] == 1
+
+
+def test_effective_overlap_depth_credit():
+    """A gather issued d iterations early is credited against d iterations
+    of compute: at a bandwidth where one iteration cannot cover it, the
+    2-slot ring strictly beats the 1-slot ring; at a fast operating point
+    both saturate to the structural fraction."""
+    from repro.launch.hlo_analysis import effective_overlap
+
+    ov1 = analyze_overlap(_RING1_HLO)
+    ov2 = analyze_overlap(_RING2_HLO)
+    assert ov1["overlap_fraction"] == ov2["overlap_fraction"] == 1.0
+    slow = dict(peak_flops=1e9,
+                tier_bw={"model": 1e6, "data": 1e6, "pod": 1e6},
+                coll_latency_s=0.0)
+    e1 = effective_overlap(ov1, **slow)["effective_overlap_fraction"]
+    e2 = effective_overlap(ov2, **slow)["effective_overlap_fraction"]
+    assert 0.0 < e1 < e2 <= 1.0, (e1, e2)
+    fast = dict(peak_flops=1e9,
+                tier_bw={"model": 1e12, "data": 1e12, "pod": 1e12},
+                coll_latency_s=0.0)
+    for ov in (ov1, ov2):
+        eff = effective_overlap(ov, **fast)["effective_overlap_fraction"]
+        assert eff == ov["overlap_fraction"], (eff, ov["overlap_fraction"])
