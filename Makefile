@@ -9,7 +9,7 @@ MP8       = XLA_FLAGS=--xla_force_host_platform_device_count=8
 PYPATH    = PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH}
 
 .PHONY: test test-fast bench-smoke bench ckpt-smoke serve-smoke moe-smoke \
-        ring-smoke
+        ring-smoke fault-smoke
 
 # tier-1 verify (ROADMAP.md): full suite, stop on first failure
 test:
@@ -61,6 +61,27 @@ ring-smoke:
 	from repro.testing.subproc import run_checks; \
 	run_checks(['check_ring_overlap_depth'], n_devices=8, timeout=2400); \
 	print('ring smoke OK: depth-2 ring beats depth-1 on dense + MoE')"
+
+# elastic fault-tolerance smoke (train/elastic.py + testing/faults.py):
+# async writer overlap, worker death -> bit-exact resume, transient-write
+# retries, live 8->4->8 in-memory resharding, quarantine-and-fall-back on
+# corrupt checkpoints, and REAL SIGKILL/SIGTERM subprocess scenarios
+# (crash mid-write leaves only unselectable debris; graceful drain)
+fault-smoke:
+	$(PYPATH) $(PY) -c "\
+	from repro.testing.subproc import run_checks; \
+	run_checks(['check_elastic_async_overlap', \
+	            'check_elastic_kill_resume', \
+	            'check_elastic_flaky_io_retry'], n_devices=8, \
+	           timeout=1800); \
+	run_checks(['check_elastic_live_reshard', \
+	            'check_elastic_corrupt_fallback'], n_devices=8, \
+	           timeout=1800); \
+	run_checks(['check_elastic_crash_during_write', \
+	            'check_elastic_sigterm_grace'], n_devices=8, \
+	           timeout=1800); \
+	print('fault smoke OK: async ckpt overlap, bit-exact resume, live '\
+	      'reshard, corrupt fallback, real-signal crash/drain verified')"
 
 # overlap benchmark + suite smoke in one command: verifies the prefetched
 # schedule from compiled HLO on the 8-device CPU mesh, then prints the

@@ -7,6 +7,10 @@ curves:
   * zeropp (blocked INT8/INT4) must track the ZeRO-3 baseline closely;
   * zeropp with NON-blocked (single-scale) weight quantization must be
     clearly worse / unstable — the paper's divergence result.
+
+``--elastic`` instead compares an INTERRUPTED run (worker death mid-run,
+resume from the latest async checkpoint via the elastic supervisor)
+against the uninterrupted oracle: the replayed curve must be bit-exact.
 """
 from __future__ import annotations
 
@@ -57,19 +61,70 @@ print("RESULT " + json.dumps(out))
 """
 
 
-def run(steps: int = 40):
+_ELASTIC_SNIPPET = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import tempfile
+from repro.testing.faults import StepFaults
+from repro.train.elastic import ElasticConfig, Supervisor
+
+STEPS = int(os.environ.get("CONV_STEPS", "24"))
+DIE_AT = STEPS // 2
+oracle = Supervisor(ElasticConfig(steps=STEPS, log=False)).run_supervised()
+d = tempfile.mkdtemp(prefix="conv_elastic_")
+hit = Supervisor(ElasticConfig(steps=STEPS, ckpt_dir=d, ckpt_every=4,
+                               log=False),
+                 faults=StepFaults({DIE_AT: "die"})).run_supervised()
+out = {"die_at": DIE_AT, "restarts": hit["restarts"],
+       "writer_stats": hit["writer_stats"],
+       "oracle": [oracle["losses"][i] for i in range(STEPS)],
+       "interrupted": [hit["losses"][i] for i in range(STEPS)]}
+print("RESULT " + json.dumps(out))
+"""
+
+
+def _run_snippet(snippet: str, steps: int):
     env = dict(os.environ)
     src = os.path.join(os.path.dirname(__file__), "..", "src")
     env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep \
         + env.get("PYTHONPATH", "")
     env.pop("XLA_FLAGS", None)
     env["CONV_STEPS"] = str(steps)
-    r = subprocess.run([sys.executable, "-c", _SNIPPET], env=env,
+    r = subprocess.run([sys.executable, "-c", snippet], env=env,
                        capture_output=True, text=True, timeout=3600)
     for line in r.stdout.splitlines():
         if line.startswith("RESULT "):
             return json.loads(line[len("RESULT "):])
     raise RuntimeError(f"convergence run failed:\n{r.stdout}\n{r.stderr}")
+
+
+def run(steps: int = 40):
+    return _run_snippet(_SNIPPET, steps)
+
+
+def run_elastic(steps: int = 24):
+    """Interrupted-vs-uninterrupted: a worker death mid-run (resume from
+    the latest async checkpoint) must not perturb convergence AT ALL —
+    fp32 state + deterministic data makes the replayed curve bit-exact."""
+    return _run_snippet(_ELASTIC_SNIPPET, steps)
+
+
+def main_elastic(steps: int = 24):
+    out = run_elastic(steps)
+    o, h = out["oracle"], out["interrupted"]
+    print(f"# elastic: worker death at step {out['die_at']} "
+          f"(restarts={out['restarts']}) vs uninterrupted")
+    print("step,uninterrupted,interrupted")
+    for i in range(0, len(o), max(1, len(o) // 8)):
+        print(f"{i},{o[i]!r},{h[i]!r}")
+    diff = max(abs(a - b) for a, b in zip(o, h))
+    print(f"max_abs_loss_diff,{diff!r}")
+    print(f"bit_exact,{diff == 0.0}")
+    ws = out["writer_stats"]
+    print(f"async_writes,{ws['completed']} "
+          f"steps_overlapped,{ws['steps_overlapped']}")
+    return out
 
 
 def main(steps: int = 40):
@@ -90,4 +145,7 @@ def main(steps: int = 40):
 
 
 if __name__ == "__main__":
-    main()
+    if "--elastic" in sys.argv:
+        main_elastic()
+    else:
+        main()

@@ -1,17 +1,24 @@
-"""Fault tolerance demo: node failure mid-run + ELASTIC restart.
+"""Elastic fault-tolerance demo: the supervisor runtime end to end.
 
-All checkpoints go through the ZeroState subsystem (train/state.py):
-per-shard files + a manifest, written atomically (tmp dir + rename).
+Every phase drives ``repro.launch.train --elastic`` — the supervisor from
+train/elastic.py with ASYNC background checkpoints (per-shard files +
+checksummed manifest, staged commit + atomic rename), restoring through
+``ZeroState.restore_resilient``.
 
-Phase 1 trains on a 4x2 mesh (8 devices) with periodic checkpoints and a
-simulated node failure; the launcher restarts from the latest checkpoint.
-Phase 2 restores the same checkpoint onto a 2x2 mesh (4 devices): the flat
-ZeRO buffers re-fit onto the new world's padding and training continues —
-no layout surgery, loss picks up where it left off.
-Phase 3 switches to the INT8 block-quantized checkpoint format (~4x
-smaller on disk) and Phase 4 elastically restores THAT onto a 1x2 mesh
-(world 4 -> 2, a third padding alignment): loss continues within the
-quantization error bound.
+Phase 1  worker death at step 6: the supervisor abandons the in-flight
+         write, restores the latest committed async checkpoint and
+         replays — post-resume losses are bit-identical to an
+         uninterrupted run (the fault suite asserts this).
+Phase 2  LIVE resharding mid-run: world 8 -> 4 at step 14 and back 4 -> 8
+         at step 17, moving the state through host memory only — no
+         checkpoint file is read.
+Phase 3  graceful preemption (injected; a real SIGTERM takes the same
+         path): the slowed in-flight write is drained within the grace
+         window and a final synchronous checkpoint is cut before exit.
+Phase 4  corrupt checkpoint on disk: bit-rot is injected into the newest
+         checkpoint; the per-shard checksums catch it, the directory is
+         quarantined aside (``.corrupt``) and the run falls back to the
+         previous intact checkpoint.
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   PYTHONPATH=src python examples/elastic_restart.py
@@ -37,23 +44,32 @@ def run(argv):
 
 def main():
     shutil.rmtree(CKPT, ignore_errors=True)
-    common = ["--arch", "gpt-350m", "--reduced", "--batch", "16",
-              "--seq", "64", "--ckpt-dir", CKPT, "--ckpt-every", "4",
-              "--log-every", "2"]
+    common = ["--elastic", "--arch", "gpt-350m", "--reduced", "--batch",
+              "16", "--seq", "64", "--ckpt-dir", CKPT, "--ckpt-every", "4"]
 
-    print("=== phase 1: 4x2 mesh, failure at step 9, auto-restart ===")
-    run(common + ["--mesh", "4x2", "--steps", "12",
-                  "--simulate-failure-at", "9"])
+    print("=== phase 1: worker death at step 6 -> restore from the "
+          "latest async checkpoint, bit-exact replay ===")
+    run(common + ["--mesh", "4x2", "--steps", "12", "--fault-die-at", "6"])
 
-    print("\n=== phase 2: ELASTIC restore onto a 2x2 mesh (world 8 -> 4) ===")
-    run(common + ["--mesh", "2x2", "--steps", "16"])
+    print("\n=== phase 2: LIVE reshard 8 -> 4 -> 8 mid-run "
+          "(in-memory, no checkpoint read) ===")
+    run(common + ["--mesh", "4x2", "--steps", "20",
+                  "--reshard", "14:2x2,17:4x2"])
 
-    print("\n=== phase 3: INT8 block-quantized per-shard checkpoints ===")
-    run(common + ["--mesh", "2x2", "--steps", "20", "--ckpt-format", "int8"])
+    print("\n=== phase 3: graceful preemption at step 22 — drain the "
+          "slowed in-flight write, cut a final checkpoint ===")
+    run(common + ["--mesh", "4x2", "--steps", "26",
+                  "--fault-preempt-at", "22",
+                  "--fault-slow-write", "1", "--grace", "30"])
 
-    print("\n=== phase 4: ELASTIC restore from INT8 onto 1x2 (world 4 -> 2) "
-          "===")
-    run(common + ["--mesh", "1x2", "--steps", "22"])
+    print("\n=== phase 4: bit-rot in the newest checkpoint -> "
+          "quarantine and fall back ===")
+    from repro.testing.faults import corrupt_shard
+    from repro.train.state import latest_checkpoint
+    newest = latest_checkpoint(CKPT)
+    print(f"corrupting {newest}")
+    corrupt_shard(newest)
+    run(common + ["--mesh", "4x2", "--steps", "26"])
 
 
 if __name__ == "__main__":

@@ -172,7 +172,8 @@ def _ring_grad_tail(dWring_f: Array, dprevs: Array, n: int, k: int,
 def zero_apply_scan(f: Callable, z: ZeroConfig, *,
                     f_fwd: Optional[Callable] = None,
                     f_bwd: Optional[Callable] = None,
-                    spec: Optional[Callable] = None):
+                    spec: Optional[Callable] = None,
+                    bwd_spec: Optional[Callable] = None):
     """Scan ``f`` over stacked per-layer primary shards, ZeRO++ style.
 
     ``f(W_full, h, x, *bargs) -> (h_next, y)`` where
@@ -214,9 +215,22 @@ def zero_apply_scan(f: Callable, z: ZeroConfig, *,
         the backward differentiates, consuming the saved ``aux`` (the MoE
         expert-chunk secondary shards: the nested recompute then rides
         the hpZ fast tier instead of re-gathering on qwZ).
+      * ``bwd_spec(auxs, i) -> shard`` — the backward mirror of ``spec``:
+        a per-layer speculative-gather source drawn from the STACKED saved
+        residuals.  The reverse scan pre-gathers
+        ``bwd_gather(bwd_spec(auxs, i-k))`` alongside layer *i-k*'s
+        weights (one extra slot ring) and hands the buffer to ``f_bwd`` as
+        keyword ``W0`` — so the nested recompute's chunk 0 is seeded from
+        a ring slot filled k iterations early instead of issuing its own
+        synchronous fast-tier gather (the backward twin of routing-ahead
+        dispatch).  Same collective on the same saved value, one
+        iteration earlier: gradients stay bit-identical.  Requires
+        ``f_bwd``.
     """
     if (spec is not None or f_bwd is not None) and f_fwd is None:
         raise ValueError("zero_apply_scan: spec/f_bwd require f_fwd")
+    if bwd_spec is not None and f_bwd is None:
+        raise ValueError("zero_apply_scan: bwd_spec requires f_bwd")
 
     def run_sync(stacked, h0, xs, *bargs):
         ap = zero_apply(lambda W, h, x, *b: f(W, h, x, *b), z)
@@ -233,13 +247,14 @@ def zero_apply_scan(f: Callable, z: ZeroConfig, *,
         if z.effective_prefetch(n) < 1:
             return run_sync(stacked, h0, xs, *bargs)
         w0_meta = None if W0 is None else (W0.shape, W0.dtype)
-        return _prefetched(f, z, f_fwd, f_bwd, spec, w0_meta)(
+        return _prefetched(f, z, f_fwd, f_bwd, spec, bwd_spec, w0_meta)(
             stacked, h0, xs, tuple(bargs), W0)
 
     return run
 
 
-def _prefetched(f: Callable, z: ZeroConfig, f_fwd, f_bwd, spec, w0_meta):
+def _prefetched(f: Callable, z: ZeroConfig, f_fwd, f_bwd, spec, bwd_spec,
+                w0_meta):
     """The depth-k ring custom_vjp core (distributed, n >= 2)."""
 
     @jax.custom_vjp
@@ -325,18 +340,30 @@ def _prefetched(f: Callable, z: ZeroConfig, f_fwd, f_bwd, spec, w0_meta):
         bargs_f, bargs_i = _split_floats(bargs)
 
         if f_bwd is None:
-            def f_flt(W, h, x_f, b_f, x_i, aux):
+            def f_flt(W, h, x_f, b_f, x_i, aux, W0_l):
                 return f(W, h, _merge(x_f, x_i), *_merge(b_f, bargs_i))
-        else:
+        elif bwd_spec is None:
             # the recompute body consumes the saved per-layer residual
             # (e.g. expert-chunk secondary shards) as a constant: its
             # gradient path is owned by the engine's collectives, never
             # by differentiating the gather
-            def f_flt(W, h, x_f, b_f, x_i, aux):
+            def f_flt(W, h, x_f, b_f, x_i, aux, W0_l):
                 return f_bwd(W, h, _merge(x_f, x_i), aux,
                              *_merge(b_f, bargs_i))
+        else:
+            def f_flt(W, h, x_f, b_f, x_i, aux, W0_l):
+                return f_bwd(W, h, _merge(x_f, x_i), aux,
+                             *_merge(b_f, bargs_i), W0=W0_l)
 
         Wring0 = _bwd_ring_seed(src, n, k, lambda p: _bwd_gather(p, z))
+        if bwd_spec is not None:
+            # backward speculative ring: slot i%k carries the pre-gathered
+            # chunk-0 buffer f_bwd's nested recompute would otherwise
+            # gather synchronously at its own seed
+            sw_slots: List[Optional[Array]] = [None] * k
+            for j in range(n - k, n):
+                sw_slots[j % k] = _bwd_gather(bwd_spec(auxs, j), z)
+            sWring0 = jnp.stack(sw_slots)
         zero_b = jax.tree.map(
             lambda v: jnp.zeros(v.shape, v.dtype), bargs_f)
         # dW of layer i+k rides a second ring: its reduce-scatter runs
@@ -348,21 +375,31 @@ def _prefetched(f: Callable, z: ZeroConfig, f_fwd, f_bwd, spec, w0_meta):
             else jnp.zeros((n,), jnp.float32)
 
         def body(carry, sx):
-            g_h, Wring, dWring, bg = carry
+            if bwd_spec is not None:
+                g_h, Wring, dWring, bg, sWring = carry
+            else:
+                g_h, Wring, dWring, bg = carry
             i, x_f, x_i, h_in, ct_y, aux = sx
             slot = jnp.remainder(i, k)
+            prev = jnp.remainder(i - k, n)
             # 1. reduce layer i+k's pending gradient     [no dep on 3.]
             dprev = grad_reduce(_ring_read(dWring, slot), z)
             # 2. prefetch layer i-k's backward gather    [no dep on 3.]
             p_prev = jax.tree.map(
                 lambda s: lax.dynamic_index_in_dim(
-                    s, jnp.remainder(i - k, n), axis=0, keepdims=False),
+                    s, prev, axis=0, keepdims=False),
                 src)
             W_prev = _bwd_gather(p_prev, z)
+            if bwd_spec is not None:
+                # 2b. ... and layer i-k's speculative chunk-0 buffer
+                s_prev = _bwd_gather(bwd_spec(auxs, prev), z)
+                W0_l = _ring_read(sWring, slot)
+            else:
+                W0_l = None
             # 3. recompute layer i and differentiate (remat)
             W = _ring_read(Wring, slot)
             _, vjp_fn = jax.vjp(
-                lambda w, hh, xf, bf: f_flt(w, hh, xf, bf, x_i, aux),
+                lambda w, hh, xf, bf: f_flt(w, hh, xf, bf, x_i, aux, W0_l),
                 W, h_in, x_f, bargs_f)
             dW, dh, dx_f, db_f = vjp_fn((g_h, ct_y))
             bg = jax.tree.map(jnp.add, bg, db_f)
@@ -371,13 +408,20 @@ def _prefetched(f: Callable, z: ZeroConfig, f_fwd, f_bwd, spec, w0_meta):
             dWring2 = _ring_write(dWring, dWflat, slot)
             # joint pin: collectives (1., 2.) and compute (3.) all complete
             # inside this iteration, mutually independent
+            if bwd_spec is not None:
+                sWring2 = _ring_write(sWring, s_prev, slot)
+                dh, Wring2, dWring2, dprev, sWring2 = \
+                    lax.optimization_barrier(
+                        (dh, Wring2, dWring2, dprev, sWring2))
+                return (dh, Wring2, dWring2, bg, sWring2), (dprev, dx_f)
             dh, Wring2, dWring2, dprev = lax.optimization_barrier(
                 (dh, Wring2, dWring2, dprev))
             return (dh, Wring2, dWring2, bg), (dprev, dx_f)
 
-        (dh0, _, dWring_f, bg), (dprevs, dxs_f) = lax.scan(
-            body,
-            (ct_h, Wring0, dWring0, zero_b),
+        init = (ct_h, Wring0, dWring0, zero_b, sWring0) \
+            if bwd_spec is not None else (ct_h, Wring0, dWring0, zero_b)
+        (dh0, _, dWring_f, bg, *_), (dprevs, dxs_f) = lax.scan(
+            body, init,
             (jnp.arange(n, dtype=jnp.int32), xs_f, xs_i, h_ins, ct_ys,
              aux_xs),
             reverse=True)
@@ -461,7 +505,7 @@ def zero_chunk_scan_inference(f: Callable, z: ZeroConfig):
 def zero_chunk_scan_hpz(f: Callable, z: ZeroConfig):
     """Nested-recompute chunk pipeline fed from saved secondary shards.
 
-    ``run(stacked, sec, xs, *bargs) -> ys`` — the same math as
+    ``run(stacked, sec, xs, *bargs, W0=None) -> ys`` — the same math as
     :func:`zero_chunk_scan`, but every chunk's full weights are rebuilt
     with an intra-node hpZ all-gather of ``sec`` (the stack saved by
     ``zero_chunk_scan(collect_secondary=True)``) instead of the primary
@@ -471,8 +515,12 @@ def zero_chunk_scan_hpz(f: Callable, z: ZeroConfig):
     recompute's wire bytes ride changes.  ``sec`` is a schedule detail,
     not a differentiable input: its cotangent is zero (the expert
     gradient flows through d(stacked), exactly as in the primary
-    pipeline).  Requires ``z.hpz``; the forward uses the same depth-k
-    ring, the backward the mirrored reverse ring with pipelined reduces.
+    pipeline).  ``W0``, if given, is chunk 0's already-gathered full
+    weights (the outer scan's ``bwd_spec`` ring slot): the ring seed then
+    skips its own synchronous chunk-0 gather — one fewer fast-tier gather
+    on the recompute's critical path, same value, zero cotangent.
+    Requires ``z.hpz``; the forward uses the same depth-k ring, the
+    backward the mirrored reverse ring with pipelined reduces.
     """
     if not (z.hpz and z.distributed):
         raise ValueError("zero_chunk_scan_hpz requires distributed hpZ")
@@ -480,12 +528,25 @@ def zero_chunk_scan_hpz(f: Callable, z: ZeroConfig):
     def _gather(s):
         return cl.hpz_all_gather(s, z.secondary_axes)
 
+    def make(w0_meta):
+        return _chunk_hpz_vjp(f, z, _gather, w0_meta)
+
+    def run(stacked, sec, xs, *bargs, W0: Optional[Array] = None):
+        w0_meta = None if W0 is None else (W0.shape, W0.dtype)
+        return make(w0_meta)(stacked, sec, xs, tuple(bargs), W0)
+
+    return run
+
+
+def _chunk_hpz_vjp(f: Callable, z: ZeroConfig, _gather, w0_meta):
+    """The hpZ chunk pipeline's custom_vjp (one instance per W0 arity)."""
+
     @jax.custom_vjp
-    def scanned(stacked, sec, xs, bargs):
-        out, _ = scanned_fwd(stacked, sec, xs, bargs)
+    def scanned(stacked, sec, xs, bargs, W0):
+        out, _ = scanned_fwd(stacked, sec, xs, bargs, W0)
         return out
 
-    def scanned_fwd(stacked, sec, xs, bargs):
+    def scanned_fwd(stacked, sec, xs, bargs, W0):
         nc = sec.shape[0]
         k = z.effective_prefetch(nc)
         if k < 1:
@@ -496,7 +557,9 @@ def zero_chunk_scan_hpz(f: Callable, z: ZeroConfig):
             _, ys = lax.scan(body_sync, (), (sec, xs))
             return ys, (stacked, sec, xs, bargs)
 
-        ring0 = jnp.stack([_gather(sec[j]) for j in range(k)])
+        seed = [W0 if (j == 0 and w0_meta is not None)
+                else _gather(sec[j]) for j in range(k)]
+        ring0 = jnp.stack(seed)
 
         def body(ring, sx):
             i, x = sx
@@ -574,14 +637,12 @@ def zero_chunk_scan_hpz(f: Callable, z: ZeroConfig):
 
         dxs = _merge(dxs_f, _int_cotangents(xs_i, (nc,)))
         dbargs = _merge(bg, _int_cotangents(bargs_i))
-        return dstacked, jnp.zeros_like(sec), dxs, dbargs
+        dW0 = None if w0_meta is None \
+            else jnp.zeros(w0_meta[0], w0_meta[1])
+        return dstacked, jnp.zeros_like(sec), dxs, dbargs, dW0
 
     scanned.defvjp(scanned_fwd, scanned_bwd)
-
-    def run(stacked, sec, xs, *bargs):
-        return scanned(stacked, sec, xs, tuple(bargs))
-
-    return run
+    return scanned
 
 
 # ---------------------------------------------------------------------------

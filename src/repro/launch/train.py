@@ -8,6 +8,10 @@ Production behaviours exercised here (and by tests/examples):
     to prove it), including ELASTIC restart onto a different device count —
     flat buffers re-fit onto the new world's padding (see state.fit_to)
   * per-step metrics (loss / grad-norm / tokens/s)
+  * ``--elastic``: the fault-tolerant supervisor (train/elastic.py) with
+    async background checkpoints, SIGTERM grace drain, restart on worker
+    death and live ``--reshard`` mid-run; ``--fault-*`` flags inject the
+    failure menu from testing/faults.py for the smoke suite
 
 Run on CPU with simulated devices, e.g.:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -132,6 +136,59 @@ def train_loop(args) -> Dict[str, Any]:
             "final_loss": losses[-1] if losses else None}
 
 
+def run_elastic(args) -> None:
+    """Drive one run under the elastic supervisor (train/elastic.py),
+    translating CLI fault/reshard knobs into the injection harness."""
+    from repro.train.elastic import ElasticConfig, Supervisor
+
+    faults = None
+    plan = {}
+    if args.fault_die_at is not None:
+        plan[args.fault_die_at] = "die"
+    if args.fault_preempt_at is not None:
+        plan[args.fault_preempt_at] = "preempt"
+    if plan:
+        from repro.testing.faults import StepFaults
+        faults = StepFaults(plan)
+    hooks = []
+    if args.fault_slow_write:
+        from repro.testing.faults import SlowIO
+        hooks.append(SlowIO(args.fault_slow_write))
+    if args.fault_flaky_writes:
+        from repro.testing.faults import FlakyIO
+        hooks.append(FlakyIO(args.fault_flaky_writes))
+    io_hooks = None
+    if hooks:
+        from repro.testing.faults import ChainedHooks
+        io_hooks = hooks[0] if len(hooks) == 1 else ChainedHooks(hooks)
+    reshard_plan = None
+    if args.reshard:
+        reshard_plan = {}
+        for part in args.reshard.split(","):
+            step_s, shape_s = part.split(":")
+            reshard_plan[int(step_s)] = tuple(
+                int(x) for x in shape_s.split("x"))
+
+    cfg = ElasticConfig(
+        arch=args.arch, reduced=args.reduced,
+        mesh=tuple(int(x) for x in args.mesh.split("x")),
+        variant=args.variant, steps=args.steps, batch=args.batch,
+        seq=args.seq, lr=args.lr, accum=args.accum, seed=args.seed,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+        ckpt_format=args.ckpt_format, async_ckpt=not args.sync_ckpt,
+        retries=args.ckpt_retries, backoff=args.ckpt_backoff,
+        grace=args.grace, max_restarts=args.max_restarts)
+    sup = Supervisor(cfg, faults=faults, reshard_plan=reshard_plan,
+                     io_hooks=io_hooks)
+    sup.install_signal_handlers()
+    out = sup.run_supervised()
+    last = out["losses"].get(out["final_step"] - 1)
+    print(f"[elastic] done: status={out['status']} "
+          f"final_step={out['final_step']} restarts={out['restarts']} "
+          f"resharded={out['resharded']} "
+          f"last_loss={last if last is None else f'{last:.4f}'}")
+
+
 def main():
     # before any jax import: let the backend's latency-hiding scheduler
     # exploit the prefetched schedule (core/schedule.py, launch/xla_flags.py)
@@ -160,7 +217,32 @@ def main():
     ap.add_argument("--log-every", type=int, default=5)
     ap.add_argument("--simulate-failure-at", type=int, default=None)
     ap.add_argument("--max-restarts", type=int, default=2)
+    # elastic supervisor mode (train/elastic.py) + its fault-injection knobs
+    ap.add_argument("--elastic", action="store_true",
+                    help="run under the elastic supervisor: async "
+                         "checkpoints, SIGTERM grace drain, restart on "
+                         "worker death, live resharding")
+    ap.add_argument("--sync-ckpt", action="store_true",
+                    help="elastic mode: blocking in-loop saves instead of "
+                         "the async background writer")
+    ap.add_argument("--grace", type=float, default=30.0,
+                    help="seconds between preemption signal and exit")
+    ap.add_argument("--ckpt-retries", type=int, default=0)
+    ap.add_argument("--ckpt-backoff", type=float, default=0.05)
+    ap.add_argument("--reshard", default=None,
+                    help="live reshard plan, e.g. '3:2x2,6:4x2'")
+    ap.add_argument("--fault-die-at", type=int, default=None,
+                    help="inject a worker death at this step")
+    ap.add_argument("--fault-preempt-at", type=int, default=None,
+                    help="inject a graceful preemption at this step")
+    ap.add_argument("--fault-slow-write", type=float, default=None,
+                    help="sleep this long inside every shard write")
+    ap.add_argument("--fault-flaky-writes", type=int, default=None,
+                    help="fail the first N shard writes with OSError")
     args = ap.parse_args()
+
+    if args.elastic:
+        return run_elastic(args)
 
     # launcher-level fault tolerance: restart from latest checkpoint
     restarts = 0

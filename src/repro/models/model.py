@@ -48,6 +48,16 @@ def _spec_chunk0(xs, i):
     return lax.dynamic_index_in_dim(eflat, i, axis=0, keepdims=False)[0]
 
 
+def _bwd_spec_chunk0(auxs, i):
+    """Backward mirror of :func:`_spec_chunk0` for the reverse ring:
+    layer ``i``'s first expert-chunk SECONDARY shard, drawn from the
+    stacked per-layer residuals (the sec stacks saved by the forward).
+    The outer backward scan hpZ-gathers it one iteration early so the
+    nested recompute's chunk ring seeds from a ring slot instead of
+    issuing its own synchronous fast-tier gather."""
+    return lax.dynamic_index_in_dim(auxs, i, axis=0, keepdims=False)[0]
+
+
 class Model:
     def __init__(self, cfg: ArchConfig, zcfg: ZeroConfig, world: int = 1):
         self.cfg = cfg
@@ -327,10 +337,12 @@ class Model:
                 W0=W_spec)
         elif sec is not None:
             # nested recompute: replay the chunk pipeline from the saved
-            # secondary shards — every gather on the hpZ fast tier
+            # secondary shards — every gather on the hpZ fast tier.
+            # W_spec here is the outer bwd_spec ring's pre-gathered
+            # chunk-0 buffer (None on the unprefetched path).
             outs = zero_chunk_scan_hpz(chunk_f, z)(
                 eflat, sec, cidx, hn2, disp.dest, disp.src_tok,
-                disp.g_sorted)
+                disp.g_sorted, W0=W_spec)
         elif collect_sec:
             outs, sec_out = zero_chunk_scan(chunk_f, z,
                                             collect_secondary=True)(
@@ -411,15 +423,18 @@ class Model:
                     W_spec=W_spec, collect_sec=hpz_remat)
                 return h2, aux, sec
 
-            def moe_f_bwd(W, h, eflat, sec, cos, sin):
+            def moe_f_bwd(W, h, eflat, sec, cos, sin, W0=None):
                 h2, _, aux, _ = self._moe_layer(
-                    rs, True, W, eflat, h, cos, sin, None, None, sec=sec)
+                    rs, True, W, eflat, h, cos, sin, None, None, sec=sec,
+                    W_spec=W0)
                 return h2, aux
 
             ap = zero_apply_scan(
                 moe_f, z, f_fwd=moe_f_fwd,
                 f_bwd=moe_f_bwd if hpz_remat else None,
-                spec=spec)
+                spec=spec,
+                bwd_spec=_bwd_spec_chunk0
+                if (hpz_remat and spec is not None) else None)
             h, auxs = ap(params["blocks"], h, params["experts"], cos, sin)
         else:
             # prefetched (z.prefetch>=1) or synchronous (0) block scan —

@@ -10,6 +10,10 @@ stays occupied under sustained traffic.
 
 Step anatomy (``ServeEngine.step``):
 
+  0. expire   — requests past their per-request ``deadline`` (absolute
+                ``clock()`` time) are dropped with status ``"timeout"``:
+                active ones release their KV slot back to the pool, queued
+                ones leave the queue without ever taking a slot.
   1. admit    — FIFO scheduler pops requests while slots are free; each
                 prompt is padded to its length bucket (pure-attention
                 models; others prefill at exact length), prefilled with
@@ -41,7 +45,8 @@ weight gathers are batch-independent (tests/test_serve_engine.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -75,7 +80,8 @@ class ServeEngine:
                  kv_axes: Tuple[str, ...] = ("model",),
                  scheduler: Optional[FIFOScheduler] = None,
                  cache_dtype=None, donate: bool = True,
-                 prefetch: Optional[int] = None):
+                 prefetch: Optional[int] = None,
+                 clock: Callable[[], float] = time.monotonic):
         cfg = model.cfg
         if prefetch is not None:
             # deepen the weight-gather ring for the whole serving path:
@@ -119,8 +125,10 @@ class ServeEngine:
         self._decode = steps.build_decode_step(model, mesh, batch_axes,
                                                kv_axes, donate=donate)
         self._samplers = SamplerCache()
+        self.clock = clock                       # injectable for tests
         self.slots: List[Optional[_Active]] = [None] * n_slots
         self.results: Dict[int, List[int]] = {}
+        self.status: Dict[int, str] = {}   # uid -> queued/active/done/timeout
         self.slot_history: Dict[int, int] = {}   # uid -> slot (tests)
 
     # ------------------------------------------------------------- boot
@@ -140,10 +148,12 @@ class ServeEngine:
     def submit(self, prompt, **kw) -> int:
         """Queue a request; returns its uid.  Keyword args mirror
         ``scheduler.Request`` (max_new_tokens, temperature, top_k, top_p,
-        seed, eos_id, on_token)."""
+        seed, eos_id, on_token, deadline — absolute ``clock()`` time after
+        which the request is dropped with status ``"timeout"``)."""
         req = Request(prompt=np.asarray(prompt, np.int32), **kw)
         uid = self.scheduler.submit(req)
         self.results[uid] = []
+        self.status[uid] = "queued"
         return uid
 
     @property
@@ -176,12 +186,24 @@ class ServeEngine:
             return True
         return a.pos >= self.kv_len              # no slot left to write to
 
-    def _retire(self, a: _Active) -> None:
+    def _retire(self, a: _Active, status: str = "done") -> None:
         self.slots[a.slot] = None
         self.pool.free(a.slot)
+        self.status[a.req.uid] = status
+
+    def _expire(self, now: float) -> None:
+        """Time out requests past their deadline: active ones release their
+        KV slot back to the pool, queued ones never take one."""
+        for req in self.scheduler.expire(now):
+            self.status[req.uid] = "timeout"
+        for a in list(self.slots):
+            if a is not None and a.req.deadline is not None \
+                    and now >= a.req.deadline:
+                self._retire(a, status="timeout")
 
     def _admit(self, emitted: List[Tuple[int, int]]) -> None:
         for req, bucket in self.scheduler.admit(self.pool.n_free):
+            self.status[req.uid] = "active"
             slot = self.pool.alloc()
             assert slot is not None
             P = len(req.prompt)
@@ -209,6 +231,7 @@ class ServeEngine:
         decode over every occupied slot.  Returns the (uid, token) pairs
         emitted this step, in slot order."""
         emitted: List[Tuple[int, int]] = []
+        self._expire(self.clock())
         self._admit(emitted)
         active = [a for a in self.slots if a is not None]
         if not active:

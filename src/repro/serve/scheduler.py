@@ -36,6 +36,7 @@ class Request:
     seed: int = 0
     eos_id: Optional[int] = None
     on_token: Optional[Callable[[int, int], None]] = None
+    deadline: Optional[float] = None        # absolute engine-clock time
     uid: int = -1                           # assigned at submit
 
 
@@ -114,3 +115,14 @@ class FIFOScheduler:
             req = self._queue.popleft()
             out.append((req, self.bucket_for(len(req.prompt))))
         return out
+
+    def expire(self, now: float) -> List[Request]:
+        """Drop queued requests whose deadline has passed: a request that
+        timed out waiting must never occupy a KV slot."""
+        expired = [r for r in self._queue
+                   if r.deadline is not None and now >= r.deadline]
+        if expired:
+            dead = {id(r) for r in expired}   # ndarray fields break ==
+            self._queue = deque(r for r in self._queue
+                                if id(r) not in dead)
+        return expired

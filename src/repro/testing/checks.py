@@ -1158,3 +1158,202 @@ def check_serve_engine_continuous_batching():
                 jnp.full((1,), P_ + i - 1, jnp.int32))
             want.append(int(jnp.argmax(logits[0, -1])))
         assert res[uid] == want, (uid, res[uid], want)
+
+
+# ---------------------------------------------------------------------------
+# elastic runtime: async checkpoints, faults, live resharding (DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+def check_elastic_async_overlap():
+    """The async writer genuinely overlaps: with every shard write slowed,
+    train steps still complete WHILE a write is in flight, every submitted
+    snapshot commits, and the committed manifest carries checksums."""
+    import os
+    import tempfile
+    from repro.testing.faults import SlowIO
+    from repro.train.elastic import ElasticConfig, Supervisor
+    from repro.train.state import latest_checkpoint, read_manifest
+
+    d = tempfile.mkdtemp(prefix="elastic_overlap_")
+    slow = SlowIO(0.5)
+    out = Supervisor(ElasticConfig(steps=8, ckpt_dir=d, ckpt_every=2),
+                     io_hooks=slow).run_supervised()
+    ws = out["writer_stats"]
+    assert out["status"] == "complete" and out["final_step"] == 8
+    assert ws["submitted"] == 4 and ws["completed"] == 4, ws
+    assert ws["failed"] == 0 and ws["abandoned"] == 0, ws
+    assert ws["steps_overlapped"] > 0, ws     # steps ran during writes
+    assert slow.calls == 4
+    path = latest_checkpoint(d)
+    assert path is not None and os.path.basename(path) == "ckpt_8"
+    man = read_manifest(path)
+    assert man["step"] == 8 and man["checksums"], man.keys()
+
+
+def check_elastic_kill_resume():
+    """Worker death at step 5 (checkpoints every 2): the supervisor
+    restarts, resumes from the step-4 async checkpoint, and every
+    post-resume loss is BIT-IDENTICAL to the uninterrupted oracle run."""
+    import tempfile
+    from repro.testing.faults import StepFaults
+    from repro.train.elastic import ElasticConfig, Supervisor
+
+    oracle = Supervisor(ElasticConfig(steps=8)).run_supervised()
+    d = tempfile.mkdtemp(prefix="elastic_kill_")
+    sup = Supervisor(ElasticConfig(steps=8, ckpt_dir=d, ckpt_every=2),
+                     faults=StepFaults({5: "die"}))
+    out = sup.run_supervised()
+    assert out["status"] == "complete" and out["final_step"] == 8
+    assert out["restarts"] == 1 and out["fired"] == [(5, "die")]
+    assert set(out["losses"]) == set(range(8))
+    for i in range(8):          # includes replayed steps 4..7: bit-exact
+        assert out["losses"][i] == oracle["losses"][i], \
+            (i, out["losses"][i], oracle["losses"][i])
+
+
+def check_elastic_live_reshard():
+    """Live 8 -> 4 -> 8 resharding mid-run with NO checkpoint dir: the
+    state moves through host memory only.  Steps before the first reshard
+    are bit-exact vs the fixed-world oracle; the whole curve stays within
+    rel 2e-2 (different worlds reduce in different orders)."""
+    import numpy as np
+    from repro.train.elastic import ElasticConfig, Supervisor
+
+    oracle = Supervisor(ElasticConfig(steps=9)).run_supervised()
+    sup = Supervisor(ElasticConfig(steps=9),
+                     reshard_plan={3: (2, 2), 6: (4, 2)})
+    out = sup.run_supervised()
+    assert out["resharded"] == [(3, 8, 4), (6, 4, 8)], out["resharded"]
+    for i in range(3):                       # same world so far: bit-exact
+        assert out["losses"][i] == oracle["losses"][i], i
+    l_ref = np.array([oracle["losses"][i] for i in range(9)])
+    l_new = np.array([out["losses"][i] for i in range(9)])
+    rel = np.abs(l_ref - l_new) / np.abs(l_ref)
+    assert rel.max() < 0.02, (l_ref, l_new)
+
+
+def check_elastic_crash_during_write():
+    """A REAL SIGKILL lands mid async write (each shard write slowed to
+    5s): the staging dir is left behind WITHOUT a manifest, so
+    ``latest_checkpoint`` still selects the previous committed step; the
+    relaunch resumes from it, sweeps the debris on the re-save, and
+    completes."""
+    import os
+    import signal
+    import tempfile
+    from repro.testing.faults import kill_on_marker, run_train
+    from repro.train.state import MANIFEST, latest_checkpoint
+
+    d = tempfile.mkdtemp(prefix="elastic_crash_")
+    args = ["--elastic", "--reduced", "--mesh", "4x2", "--steps", "8",
+            "--ckpt-dir", d, "--ckpt-every", "2", "--fault-slow-write", "5"]
+    rc, lines = kill_on_marker(args, "committed step 2",
+                               sig=signal.SIGKILL, delay=1.5)
+    assert rc != 0
+    staging = os.path.join(d, "ckpt_4.tmp")
+    assert os.path.isdir(staging), os.listdir(d)      # genuine debris
+    assert not os.path.exists(os.path.join(staging, MANIFEST))
+    latest = latest_checkpoint(d)
+    assert latest is not None and os.path.basename(latest) == "ckpt_2", \
+        os.listdir(d)
+
+    lines2 = run_train(["--elastic", "--reduced", "--mesh", "4x2",
+                        "--steps", "8", "--ckpt-dir", d, "--ckpt-every",
+                        "2"])
+    txt = "\n".join(lines2)
+    assert "resumed from step 2" in txt, txt[-2000:]
+    assert "status=complete" in txt and "final_step=8" in txt
+    assert os.path.basename(latest_checkpoint(d)) == "ckpt_8"
+    assert not os.path.isdir(staging)       # re-save swept the stale dir
+
+
+def check_elastic_sigterm_grace():
+    """Graceful preemption, both ways in: a REAL SIGTERM mid-run and an
+    injected in-process preempt.  Both must drain the in-flight write,
+    cut a final synchronous checkpoint, exit cleanly, and resume."""
+    import os
+    import signal
+    import tempfile
+    from repro.testing.faults import StepFaults, kill_on_marker, run_train
+    from repro.train.elastic import ElasticConfig, Supervisor
+    from repro.train.state import latest_checkpoint, read_manifest
+
+    # real signal, subprocess
+    d = tempfile.mkdtemp(prefix="elastic_term_")
+    args = ["--elastic", "--reduced", "--mesh", "4x2", "--steps", "12",
+            "--ckpt-dir", d, "--ckpt-every", "2", "--grace", "30"]
+    rc, lines = kill_on_marker(args, "step 4 loss", sig=signal.SIGTERM)
+    txt = "\n".join(lines)
+    assert rc == 0, txt[-2000:]
+    assert "preemption requested" in txt and "preempted at step" in txt
+    assert "status=preempted" in txt
+    path = latest_checkpoint(d)
+    assert path is not None
+    stop = read_manifest(path)["step"]
+    assert 4 < stop < 12                   # stopped early, but checkpointed
+    txt2 = "\n".join(run_train(
+        ["--elastic", "--reduced", "--mesh", "4x2", "--steps", "12",
+         "--ckpt-dir", d, "--ckpt-every", "2"]))
+    assert f"resumed from step {stop}" in txt2, txt2[-2000:]
+    assert "status=complete" in txt2 and "final_step=12" in txt2
+
+    # injected preempt, in-process
+    d2 = tempfile.mkdtemp(prefix="elastic_term2_")
+    out = Supervisor(ElasticConfig(steps=12, ckpt_dir=d2, ckpt_every=2),
+                     faults=StepFaults({5: "preempt"})).run_supervised()
+    assert out["status"] == "preempted" and out["final_step"] == 5
+    assert os.path.basename(latest_checkpoint(d2)) == "ckpt_5"
+    out2 = Supervisor(ElasticConfig(steps=12, ckpt_dir=d2,
+                                    ckpt_every=2)).run_supervised()
+    assert out2["status"] == "complete" and out2["final_step"] == 12
+
+
+def check_elastic_corrupt_fallback():
+    """Quarantine-and-fall-back: with the two newest checkpoints damaged
+    (bit-rot in one, truncation in the other), ``restore_resilient``
+    quarantines both and restores the oldest intact one; when EVERY
+    checkpoint is damaged it returns None instead of raising."""
+    import os
+    import tempfile
+    from repro.testing.faults import corrupt_shard, truncate_shard
+    from repro.train.elastic import ElasticConfig, Supervisor
+    from repro.train.state import ZeroState
+
+    d = tempfile.mkdtemp(prefix="elastic_corrupt_")
+    Supervisor(ElasticConfig(steps=6, ckpt_dir=d,
+                             ckpt_every=2)).run_supervised()
+    corrupt_shard(os.path.join(d, "ckpt_6"))     # crc catches bit-rot
+    truncate_shard(os.path.join(d, "ckpt_4"))    # short read
+    mesh, arch, model, opt_cfg, ts, lm = _train_setup()
+    st = ZeroState.restore_resilient(model, mesh, opt_cfg, d)
+    assert st is not None and int(st.step) == 2
+    assert os.path.isdir(os.path.join(d, "ckpt_6.corrupt"))
+    assert os.path.isdir(os.path.join(d, "ckpt_4.corrupt"))
+    corrupt_shard(os.path.join(d, "ckpt_2"))
+    assert ZeroState.restore_resilient(model, mesh, opt_cfg, d) is None
+    # and the supervisor on an all-quarantined dir starts from scratch
+    out = Supervisor(ElasticConfig(steps=2, ckpt_dir=d,
+                                   ckpt_every=2)).run_supervised()
+    assert out["status"] == "complete" and 0 in out["losses"]
+
+
+def check_elastic_flaky_io_retry():
+    """Transient write errors: the first two shard writes fail with
+    OSError; with retries=3 the async writer absorbs them (retry with
+    exponential backoff) and every snapshot still commits."""
+    import os
+    import tempfile
+    from repro.testing.faults import FlakyIO
+    from repro.train.elastic import ElasticConfig, Supervisor
+    from repro.train.state import latest_checkpoint
+
+    d = tempfile.mkdtemp(prefix="elastic_flaky_")
+    flaky = FlakyIO(2)
+    out = Supervisor(ElasticConfig(steps=4, ckpt_dir=d, ckpt_every=2,
+                                   retries=3, backoff=0.01),
+                     io_hooks=flaky).run_supervised()
+    ws = out["writer_stats"]
+    assert out["status"] == "complete"
+    assert ws["completed"] == 2 and ws["failed"] == 0, ws
+    assert flaky.remaining == 0 and flaky.calls >= 3   # 2 fails + retries
+    assert os.path.basename(latest_checkpoint(d)) == "ckpt_4"

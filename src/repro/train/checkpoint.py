@@ -17,10 +17,13 @@ from __future__ import annotations
 
 from typing import Any, Dict, Optional, Tuple
 
-from repro.train.state import (fit_to, latest_checkpoint, load_global,
+from repro.train.state import (CheckpointCorruptError,  # noqa: F401
+                               CheckpointError, fit_to, latest_checkpoint,
+                               load_global, quarantine_checkpoint,
                                save_legacy_npz)
 
-__all__ = ["save", "load", "latest", "fit_to"]
+__all__ = ["save", "load", "latest", "fit_to", "CheckpointError",
+           "CheckpointCorruptError", "quarantine_checkpoint"]
 
 
 def save(path: str, step: int, state: Dict[str, Any],

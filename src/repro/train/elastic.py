@@ -1,0 +1,477 @@
+"""Elastic fault-tolerant training runtime (DESIGN.md §6).
+
+Two pieces on top of the ZeroState subsystem:
+
+  * :class:`AsyncCheckpointWriter` — snapshots (params, opt) with an
+    on-device donated copy (the train step donates its inputs, so the
+    snapshot must not alias them) and writes the per-shard checkpoint on a
+    background thread, overlapped with subsequent train steps.  Bounded to
+    ONE write in flight: a second ``submit`` blocks until the first
+    commits (slow-writer backpressure).  The write itself is
+    ``ZeroState.save``'s staged commit protocol — shards + fsync, then
+    manifest + fsync, then atomic rename — so a crash at any point during
+    the write can never produce a checkpoint ``latest_checkpoint`` would
+    select.  An in-flight write can be abandoned (preemption with an
+    expired grace deadline): the staging dir is swept and no manifest is
+    ever published.
+
+  * :class:`Supervisor` — the preempt/reshard/resume state machine around
+    the step loop.  It restores via ``ZeroState.restore_resilient``
+    (quarantine-and-fall-back on corrupt checkpoints), catches injected
+    :class:`WorkerDeath` and restarts from the latest committed
+    checkpoint, drains or abandons the in-flight write on SIGTERM within
+    a grace deadline (final synchronous checkpoint before exit), and
+    performs LIVE world-size resharding mid-run: device_get the global
+    buffers, rebuild model/mesh/train-step at the new world, and re-place
+    via ``ZeroState.place_global`` — no checkpoint file is read.
+
+Fault injection lives in ``repro.testing.faults``; this module only
+defines the exception type it raises so production code never imports the
+test harness.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import os
+import queue
+import signal
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.state import CheckpointError, ZeroState, _call_hook
+
+__all__ = ["WorkerDeath", "WriterStats", "AsyncCheckpointWriter",
+           "ElasticConfig", "Supervisor"]
+
+
+class WorkerDeath(RuntimeError):
+    """A worker died mid-step (injected by the fault harness): whatever
+    was in device memory is lost; the supervisor restores from the latest
+    committed checkpoint and replays."""
+
+
+class _Abandoned(Exception):
+    """Internal: the in-flight write was cancelled between I/O stages."""
+
+
+# ---------------------------------------------------------------------------
+# async checkpoint writer
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class WriterStats:
+    submitted: int = 0
+    completed: int = 0
+    abandoned: int = 0
+    failed: int = 0
+    steps_overlapped: int = 0    # train steps finished while a write ran
+    last_step: Optional[int] = None
+    last_path: Optional[str] = None
+
+
+class _CancellableHooks:
+    """Wrap user io_hooks with a cancellation check at every stage, so an
+    ``abandon()`` lands before the manifest commit even when the inner
+    hook (e.g. a SlowIO sleep) is what's eating the time."""
+
+    def __init__(self, cancel: threading.Event, inner: Any):
+        self._cancel = cancel
+        self._inner = inner
+
+    def _stage(self, name: str, *args) -> None:
+        if self._cancel.is_set():
+            raise _Abandoned(name)
+        _call_hook(self._inner, name, *args)
+        if self._cancel.is_set():
+            raise _Abandoned(name)
+
+    def post_shard(self, path: str) -> None:
+        self._stage("post_shard", path)
+
+    def pre_manifest(self, staging: str) -> None:
+        self._stage("pre_manifest", staging)
+
+    def pre_publish(self, staging: str, final: str) -> None:
+        self._stage("pre_publish", staging, final)
+
+
+class AsyncCheckpointWriter:
+    """Background per-shard checkpoint writer, never more than one write
+    in flight.
+
+    ``submit`` makes an on-device copy of (params, opt) — a cheap jitted
+    ``jnp.copy`` per buffer, required because the train step DONATES its
+    (params, opt) arguments and would otherwise overwrite the snapshot's
+    buffers mid-write — then hands it to a daemon thread that runs
+    ``ZeroState.save``.  ``note_step()`` (called by the step loop after
+    each completed step) counts overlap; ``drain()`` blocks until idle;
+    ``abandon()`` cancels the in-flight write before its manifest commit.
+    """
+
+    def __init__(self, model, mesh, opt_cfg, ckpt_dir: str, *,
+                 fmt: str = "fp32", io_hooks: Any = None,
+                 retries: int = 0, backoff: float = 0.05,
+                 on_commit: Optional[Callable[[int, str], None]] = None):
+        self.model, self.mesh, self.opt_cfg = model, mesh, opt_cfg
+        self.ckpt_dir, self.fmt = ckpt_dir, fmt
+        self.retries, self.backoff = retries, backoff
+        self.on_commit = on_commit
+        self.stats = WriterStats()
+        self._copy = jax.jit(lambda t: jax.tree.map(jnp.copy, t))
+        self._queue: "queue.Queue" = queue.Queue(maxsize=1)
+        self._idle = threading.Event()
+        self._idle.set()
+        self._cancel = threading.Event()
+        self._hooks = _CancellableHooks(self._cancel, io_hooks)
+        self._lock = threading.Lock()
+        self._error: Optional[BaseException] = None
+        self._thread = threading.Thread(
+            target=self._worker, name="ckpt-writer", daemon=True)
+        self._thread.start()
+
+    # -------------------------------------------------------- public API
+
+    def in_flight(self) -> bool:
+        return not self._idle.is_set()
+
+    def note_step(self) -> None:
+        with self._lock:
+            if not self._idle.is_set():
+                self.stats.steps_overlapped += 1
+
+    def submit(self, step: int, params, opt,
+               meta: Optional[Dict[str, Any]] = None) -> None:
+        """Snapshot on device and enqueue the write.  Blocks while a
+        previous write is still in flight (backpressure — bounded queue of
+        one), never blocks on the disk write itself."""
+        self._idle.wait()
+        self._raise_pending()
+        snap = self._copy((params, opt))
+        jax.block_until_ready(snap)     # copy done BEFORE donation reuses
+        with self._lock:
+            self.stats.submitted += 1
+            self._idle.clear()
+        self._queue.put((int(step), snap, dict(meta or {})))
+
+    def drain(self, timeout: Optional[float] = None) -> Optional[str]:
+        """Wait for the in-flight write (if any) to commit; re-raises a
+        write failure.  Returns the last committed checkpoint path."""
+        if not self._idle.wait(timeout):
+            raise TimeoutError("async checkpoint write did not finish "
+                               f"within {timeout}s")
+        self._raise_pending()
+        return self.stats.last_path
+
+    def abandon(self) -> bool:
+        """Cancel the in-flight write (no manifest is published; the
+        staging dir is swept).  Returns True if a write was cancelled."""
+        if self._idle.is_set():
+            return False
+        self._cancel.set()
+        self._idle.wait()
+        self._cancel.clear()
+        return True
+
+    def close(self) -> None:
+        self._queue.put(None)
+        self._thread.join(timeout=120)
+
+    # ---------------------------------------------------------- internal
+
+    def _raise_pending(self) -> None:
+        with self._lock:
+            err, self._error = self._error, None
+        if err is not None:
+            raise err
+
+    def _worker(self) -> None:
+        while True:
+            item = self._queue.get()
+            if item is None:
+                return
+            step, (params, opt), meta = item
+            try:
+                st = ZeroState(self.model, self.mesh, self.opt_cfg,
+                               params=params, opt=opt, step=step)
+                path = st.save(self.ckpt_dir, step, meta=meta, fmt=self.fmt,
+                               io_hooks=self._hooks, retries=self.retries,
+                               backoff=self.backoff)
+                with self._lock:
+                    self.stats.completed += 1
+                    self.stats.last_step, self.stats.last_path = step, path
+                if self.on_commit is not None:
+                    self.on_commit(step, path)
+            except _Abandoned:
+                with self._lock:
+                    self.stats.abandoned += 1
+            except CheckpointError as e:
+                # retries exhausted inside save() can surface an injected
+                # _Abandoned as the root cause — classify it as such
+                if isinstance(e.__cause__, _Abandoned):
+                    with self._lock:
+                        self.stats.abandoned += 1
+                else:
+                    with self._lock:
+                        self.stats.failed += 1
+                        self._error = e
+            except BaseException as e:   # surfaced on next submit/drain
+                with self._lock:
+                    self.stats.failed += 1
+                    self._error = e
+            finally:
+                self._idle.set()
+
+
+# ---------------------------------------------------------------------------
+# supervisor
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ElasticConfig:
+    """One elastic training run (mirrors ``launch/train`` CLI args)."""
+    arch: str = "gpt-350m"
+    reduced: bool = True
+    mesh: Tuple[int, ...] = (4, 2)
+    variant: str = "zeropp"
+    steps: int = 10
+    batch: int = 16
+    seq: int = 64
+    lr: float = 3e-3
+    accum: int = 1
+    seed: int = 0
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 0
+    ckpt_format: str = "fp32"
+    async_ckpt: bool = True
+    retries: int = 0
+    backoff: float = 0.05
+    grace: float = 30.0          # seconds between preempt signal and exit
+    max_restarts: int = 3
+    log: bool = True
+
+
+class Supervisor:
+    """Preempt/reshard/resume state machine around the train loop.
+
+    ::
+
+        RUN --WorkerDeath--> RESTORE (restore_resilient) --> RUN
+        RUN --SIGTERM/preempt--> DRAIN|ABANDON --> final sync ckpt --> EXIT
+        RUN --reshard@step--> device_get -> rebuild -> place_global --> RUN
+
+    ``reshard_plan`` maps step -> new mesh shape; the transition moves the
+    global buffers through host memory only (``ZeroState.place_global``),
+    never through a checkpoint file, so it works with ``ckpt_dir=None``.
+    ``faults`` is a ``testing.faults.StepFaults`` plan (or None) and
+    ``io_hooks`` plugs into every checkpoint write this supervisor makes.
+
+    Step markers are printed with full float repr so a subprocess harness
+    can compare post-resume losses bit-for-bit against an oracle run.
+    """
+
+    def __init__(self, cfg: ElasticConfig, *, faults: Any = None,
+                 reshard_plan: Optional[Dict[int, Tuple[int, ...]]] = None,
+                 io_hooks: Any = None):
+        self.cfg = cfg
+        self.faults = faults
+        self.reshard_plan = dict(reshard_plan or {})
+        self.io_hooks = io_hooks
+        self.writer: Optional[AsyncCheckpointWriter] = None
+        self.losses: Dict[int, float] = {}
+        self.restarts = 0
+        self.resharded: List[Tuple[int, int, int]] = []
+        self._preempt = threading.Event()
+        self._deadline: Optional[float] = None
+
+    # ------------------------------------------------------------ events
+
+    def _log(self, msg: str) -> None:
+        if self.cfg.log:
+            print(f"[elastic] {msg}", flush=True)
+
+    def request_preempt(self, grace: Optional[float] = None) -> None:
+        if grace is not None:
+            self._deadline = time.monotonic() + grace
+        self._preempt.set()
+
+    def install_signal_handlers(self) -> None:
+        """Route SIGTERM into a graceful preemption (main thread only)."""
+        def handler(signum, frame):
+            self._log(f"signal {signum}: preemption requested "
+                      f"(grace {self.cfg.grace}s)")
+            self.request_preempt(self.cfg.grace)
+        signal.signal(signal.SIGTERM, handler)
+
+    def _on_commit(self, step: int, path: str) -> None:
+        self._log(f"committed step {step} -> {os.path.basename(path)}")
+
+    def _make_writer(self, model, mesh, opt_cfg
+                     ) -> Optional[AsyncCheckpointWriter]:
+        cfg = self.cfg
+        if not (cfg.ckpt_dir and cfg.ckpt_every and cfg.async_ckpt):
+            return None
+        return AsyncCheckpointWriter(
+            model, mesh, opt_cfg, cfg.ckpt_dir, fmt=cfg.ckpt_format,
+            io_hooks=self.io_hooks, retries=cfg.retries,
+            backoff=cfg.backoff, on_commit=self._on_commit)
+
+    # ------------------------------------------------------------- drive
+
+    def run_supervised(self) -> Dict[str, Any]:
+        """:meth:`run` under the restart policy: a worker death tears the
+        run down (abandoning any in-flight write — the process "died")
+        and re-enters, which restores from the latest committed
+        checkpoint."""
+        attempt = 0
+        while True:
+            try:
+                return self.run()
+            except WorkerDeath as e:
+                if self.writer is not None:
+                    self.writer.abandon()
+                    self.writer.close()
+                    self.writer = None
+                attempt += 1
+                if attempt > self.cfg.max_restarts or not self.cfg.ckpt_dir:
+                    raise
+                self.restarts += 1
+                self._log(f"restarting after worker death "
+                          f"({attempt}/{self.cfg.max_restarts}): {e}")
+
+    def run(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        from repro.data.synthetic import make_batch
+        from repro.launch.train import build_everything
+        from repro.train.trainer import place_batch
+
+        mesh_shape = tuple(cfg.mesh)
+        mesh, arch, model, opt_cfg, ts, lm = build_everything(
+            cfg.arch, mesh_shape, cfg.variant, cfg.reduced, cfg.batch,
+            cfg.seq, cfg.lr, cfg.accum)
+
+        st = None
+        if cfg.ckpt_dir:
+            st = ZeroState.restore_resilient(model, mesh, opt_cfg,
+                                             cfg.ckpt_dir)
+        if st is not None:
+            start = int(st.step)
+            params, opt = st.params, st.opt
+            self._log(f"resumed from step {start} "
+                      f"(saved world={st.meta.get('world')}, "
+                      f"now={ts.world})")
+        else:
+            start = 0
+            st0 = ZeroState(model, mesh, opt_cfg).init(
+                jax.random.PRNGKey(cfg.seed))
+            params, opt = st0.params, st0.opt
+
+        writer = self._make_writer(model, mesh, opt_cfg)
+        self.writer = writer
+        b_specs = ts.in_specs[2]
+        i = start
+        status = "complete"
+        while i < cfg.steps:
+            if self._preempt.is_set():
+                status = "preempted"
+                break
+            new_shape = self.reshard_plan.pop(i, None)
+            if new_shape is not None and tuple(new_shape) != mesh_shape:
+                if writer is not None:     # quiesce I/O, then move state
+                    writer.drain()
+                    writer.close()
+                old_world = ts.world
+                p_host = jax.device_get(params)
+                o_host = jax.device_get(opt)
+                mesh_shape = tuple(new_shape)
+                mesh, arch, model, opt_cfg, ts, lm = build_everything(
+                    cfg.arch, mesh_shape, cfg.variant, cfg.reduced,
+                    cfg.batch, cfg.seq, cfg.lr, cfg.accum)
+                placed = ZeroState(model, mesh, opt_cfg).place_global(
+                    p_host, o_host)
+                params, opt = placed.params, placed.opt
+                b_specs = ts.in_specs[2]
+                writer = self._make_writer(model, mesh, opt_cfg)
+                self.writer = writer
+                self.resharded.append((i, old_world, ts.world))
+                self._log(f"reshard step {i} world {old_world}->{ts.world}"
+                          f" (in-memory, no disk)")
+            if self.faults is not None:
+                action = self.faults.take(i)
+                if action == "die":
+                    self._log(f"injected worker death at step {i}")
+                    raise WorkerDeath(f"injected death at step {i}")
+                if action == "preempt":
+                    self._log(f"injected preemption at step {i} "
+                              f"(grace {cfg.grace}s)")
+                    self.request_preempt(cfg.grace)
+                    continue
+            host = make_batch(arch, lm, i, cfg.batch)
+            if cfg.accum > 1:
+                host = {k: v.reshape((cfg.accum, -1) + v.shape[1:])
+                        for k, v in host.items()}
+            batch = place_batch(host, mesh, b_specs)
+            params, opt, metrics = ts.fn(params, opt, batch)
+            loss = float(metrics["loss"])
+            self.losses[i] = loss
+            if writer is not None:
+                writer.note_step()
+            self._log(f"step {i} loss {loss!r}")
+            i += 1
+            if cfg.ckpt_dir and cfg.ckpt_every and i % cfg.ckpt_every == 0:
+                meta = {"world": ts.world, "arch": arch.name,
+                        "data_cursor": i}
+                if writer is not None:
+                    self._log(f"snapshot step {i} submitted")
+                    writer.submit(i, params, opt, meta)
+                else:
+                    ZeroState(model, mesh, opt_cfg, params=params,
+                              opt=opt).save(
+                        cfg.ckpt_dir, i, meta=meta, fmt=cfg.ckpt_format,
+                        io_hooks=self.io_hooks, retries=cfg.retries,
+                        backoff=cfg.backoff)
+                    self._log(f"committed step {i} (sync)")
+
+        if status == "preempted":
+            self._finish_preempt(writer, model, mesh, opt_cfg, params, opt,
+                                 i, ts, arch)
+        elif writer is not None:
+            writer.drain()
+            self._log(f"complete at step {i}")
+        if writer is not None:
+            writer.close()
+        stats = writer.stats if writer is not None else None
+        return {"status": status, "final_step": i,
+                "losses": dict(self.losses), "restarts": self.restarts,
+                "resharded": list(self.resharded),
+                "writer_stats": dataclasses.asdict(stats) if stats else None,
+                "fired": list(self.faults.fired) if self.faults else []}
+
+    def _finish_preempt(self, writer, model, mesh, opt_cfg, params, opt,
+                        i, ts, arch) -> None:
+        cfg = self.cfg
+        remaining = math.inf if self._deadline is None \
+            else self._deadline - time.monotonic()
+        if writer is not None and writer.in_flight():
+            if remaining > 1.0:
+                writer.drain()
+                self._log("preempt: drained in-flight write")
+            else:
+                writer.abandon()
+                self._log("preempt: abandoned in-flight write "
+                          "(grace expired)")
+        if cfg.ckpt_dir:
+            st = ZeroState(model, mesh, opt_cfg, params=params, opt=opt)
+            path = st.save(cfg.ckpt_dir, i,
+                           meta={"world": ts.world, "arch": arch.name,
+                                 "data_cursor": i, "preempted": True},
+                           fmt=cfg.ckpt_format, io_hooks=self.io_hooks,
+                           retries=cfg.retries, backoff=cfg.backoff)
+            self._log(f"preempted at step {i}: final checkpoint "
+                      f"{os.path.basename(path)}")
+        else:
+            self._log(f"preempted at step {i} (no checkpoint dir)")

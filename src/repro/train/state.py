@@ -40,6 +40,9 @@ import json
 import os
 import shutil
 import tempfile
+import time
+import zipfile
+import zlib
 from typing import Any, Dict, Mapping, Optional, Tuple
 
 import jax
@@ -60,6 +63,71 @@ MANIFEST = "manifest.json"
 FORMAT_FP32 = "fp32"
 FORMAT_INT8 = "int8_blockwise"
 _QMAX8 = 127.0
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint could not be written (after exhausting retries)."""
+
+
+class CheckpointCorruptError(CheckpointError):
+    """A checkpoint on disk failed validation: truncated or bit-flipped
+    shard (checksum mismatch / unreadable npz), missing shard, or an
+    unparseable manifest.  The file exists but must not be trusted."""
+
+
+class IOHooks:
+    """Injection seam for checkpoint I/O (see testing/faults.py).
+
+    ``ZeroState.save`` calls these at fixed points of the commit protocol;
+    any hook object only needs the methods it cares about.  Raising from a
+    hook aborts the staged write exactly as a real I/O failure at that
+    point would (OSError is retried, anything else propagates).
+    """
+
+    def post_shard(self, path: str) -> None:
+        """After a shard file is written + fsynced, before its checksum."""
+
+    def pre_manifest(self, staging: str) -> None:
+        """After every shard, before the manifest is written."""
+
+    def pre_publish(self, staging: str, final: str) -> None:
+        """After the manifest fsync, before the atomic rename."""
+
+
+def _call_hook(hooks: Any, name: str, *args) -> None:
+    if hooks is None:
+        return
+    fn = getattr(hooks, name, None)
+    if fn is not None:
+        fn(*args)
+
+
+def _crc32_file(path: str) -> int:
+    crc = 0
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            crc = zlib.crc32(chunk, crc)
+    return crc & 0xFFFFFFFF
+
+
+def _fsync_dir(path: str) -> None:
+    """fsync a directory entry so renames/creates inside it are durable."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return               # platform without directory fds
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
+# np.load failure modes for a truncated / bit-flipped npz: bad zip magic,
+# bad zlib stream, short read, or numpy's "Failed to interpret" ValueError.
+_SHARD_READ_ERRORS = (OSError, ValueError, EOFError,
+                      zipfile.BadZipFile, zlib.error)
 
 
 # ---------------------------------------------------------------------------
@@ -321,6 +389,22 @@ def latest_checkpoint(directory: str, prefix: str = "ckpt_") -> Optional[str]:
     return best[1] or None
 
 
+def quarantine_checkpoint(path: str) -> str:
+    """Move a corrupt checkpoint (dir or npz) aside as ``<path>.corrupt``.
+
+    The suffix fails :func:`_ckpt_step`'s int() parse, so a quarantined
+    checkpoint is never selected by :func:`latest_checkpoint` again, and
+    the evidence stays on disk for a post-mortem instead of being deleted.
+    """
+    dst = path + ".corrupt"
+    n = 0
+    while os.path.exists(dst):
+        n += 1
+        dst = f"{path}.corrupt{n}"
+    os.rename(path, dst)
+    return dst
+
+
 # ---------------------------------------------------------------------------
 # legacy single-file GLOBAL npz (train/checkpoint.py's original format)
 # ---------------------------------------------------------------------------
@@ -351,9 +435,16 @@ def save_legacy_npz(path: str, step: int, state: Dict[str, Any],
 def load_legacy_npz(path: str, prefix: Optional[str] = None
                     ) -> Tuple[int, Dict[str, Any], Dict[str, Any]]:
     want = _key_filter(prefix)
-    with np.load(path) as z:
-        flat = {k: z[k] for k in z.files
-                if k in ("__step__", "__meta__") or want(k)}
+    try:
+        with np.load(path) as z:
+            flat = {k: z[k] for k in z.files
+                    if k in ("__step__", "__meta__") or want(k)}
+    except FileNotFoundError:
+        raise
+    except _SHARD_READ_ERRORS as e:
+        raise CheckpointCorruptError(
+            f"legacy checkpoint {path} is unreadable "
+            f"(truncated or corrupted npz): {e}") from e
     step = int(flat.pop("__step__"))
     meta = {}
     if "__meta__" in flat:
@@ -382,17 +473,40 @@ def load_global(path: str, prefix: Optional[str] = None
     """
     if not os.path.isdir(path):
         return load_legacy_npz(path, prefix)
-    with open(os.path.join(path, MANIFEST)) as f:
-        man = json.load(f)
+    try:
+        with open(os.path.join(path, MANIFEST)) as f:
+            man = json.load(f)
+    except json.JSONDecodeError as e:
+        raise CheckpointCorruptError(
+            f"checkpoint {path}: manifest is not valid JSON "
+            f"(crashed mid-write?): {e}") from e
     world = int(man["world"])
     block = man.get("quant_block")
+    sums = man.get("checksums") or {}
     want = _key_filter(prefix)
     raw: Dict[str, np.ndarray] = {}
     for fname in man["shard_files"]:
-        with np.load(os.path.join(path, fname)) as z:
-            for k in z.files:   # npz members load lazily — only read wanted
-                if want(k.split(_RANK, 1)[0]):
-                    raw[k] = z[k]
+        full = os.path.join(path, fname)
+        if not os.path.exists(full):
+            raise CheckpointCorruptError(
+                f"checkpoint {path} is missing shard file {fname}")
+        want_crc = sums.get(fname)
+        if want_crc is not None:
+            got = _crc32_file(full)
+            if got != int(want_crc):
+                raise CheckpointCorruptError(
+                    f"checkpoint {path}: shard {fname} checksum mismatch "
+                    f"(manifest {int(want_crc):#010x}, file {got:#010x}) — "
+                    f"truncated or corrupted on disk")
+        try:
+            with np.load(full) as z:
+                for k in z.files:   # npz members load lazily — only wanted
+                    if want(k.split(_RANK, 1)[0]):
+                        raw[k] = z[k]
+        except _SHARD_READ_ERRORS as e:
+            raise CheckpointCorruptError(
+                f"checkpoint {path}: shard {fname} is unreadable: {e}"
+            ) from e
     flat: Dict[str, np.ndarray] = {}
     for key, info in man["layout"].items():
         if not want(key):
@@ -405,7 +519,7 @@ def load_global(path: str, prefix: Optional[str] = None
         for r in range(world):
             pk = f"{key}{_RANK}{r}"
             if pk not in raw:
-                raise FileNotFoundError(
+                raise CheckpointCorruptError(
                     f"checkpoint {path} is missing shard {pk} "
                     f"(world={world}, files={man['shard_files']})")
             sk = pk + _SCALES
@@ -542,13 +656,29 @@ class ZeroState:
     def save(self, ckpt_dir: str, step: Optional[int] = None,
              meta: Optional[Dict[str, Any]] = None,
              fmt: str = FORMAT_FP32,
-             quant_block: Optional[int] = None) -> str:
+             quant_block: Optional[int] = None,
+             io_hooks: Optional[Any] = None,
+             retries: int = 0,
+             backoff: float = 0.05) -> str:
         """Per-shard atomic save to ``ckpt_dir/ckpt_<step>/``.
 
+        Commit protocol (what a crash at any point leaves behind):
+          1. shard files into a ``.tmp`` staging dir, fsynced — crash here
+             leaves only ``.tmp`` debris that :func:`latest_checkpoint`
+             never selects and the next save sweeps away;
+          2. per-shard crc32 checksums collected into the manifest;
+          3. ``manifest.json`` written + fsynced LAST (process 0) — its
+             presence is the commit record;
+          4. atomic ``os.replace`` of staging onto the final name, then a
+             directory fsync.  A previous checkpoint for the same step is
+             moved aside first so there is never a window with neither.
+
         Each process writes a single ``shard_<proc>.npz`` holding only the
-        world-shards its devices own; process 0 writes ``manifest.json``
-        last and renames the staging dir into place (a dir without a
-        manifest is never picked up by :func:`latest_checkpoint`).
+        world-shards its devices own.  ``retries`` re-runs the staged write
+        on OSError with exponential ``backoff`` (the host payload is built
+        once; only file I/O is retried); exhaustion raises
+        :class:`CheckpointError`.  ``io_hooks`` is the fault-injection seam
+        (see :class:`IOHooks`).
 
         ``fmt="int8_blockwise"`` (alias ``"int8"``) stores every sharded
         float buffer as an 8-bit payload + fp16 per-block scales — the qwZ
@@ -575,6 +705,61 @@ class ZeroState:
         flat = flatten_state(state)
         specs = flatten_state(spec_tree)
 
+        # host payload first (one device_get) — retries redo file I/O only
+        payload: Dict[str, np.ndarray] = {}
+        layout: Dict[str, Any] = {}
+        v_prefix = f"opt{_SEP}v"
+        for key, arr in flat.items():
+            sharded = tuple(specs[key]) != ()
+            shards = self._owned_shards(arr, sharded)
+            dt = _dtype_str(arr.dtype)
+            # the nonnegative second moment takes the sqrt-domain
+            # encoder (see quantize_shard_sqrt for why)
+            sqrt_domain = key == v_prefix \
+                or key.startswith(v_prefix + _SEP)
+            encoding = "raw"
+            for rank, a in sorted(shards.items()):
+                if rank < 0:  # replicated: stored once, by process 0
+                    if jax.process_index() == 0:
+                        payload[key] = _encode(a)
+                    continue
+                pk = f"{key}{_RANK}{rank}"
+                if (fmt == FORMAT_INT8 and a.dtype.kind == "f"
+                        and a.shape[-1] % quant_block == 0):
+                    if sqrt_domain:
+                        q, sc = quantize_shard_sqrt(a, quant_block)
+                        encoding = "uint8_sqrt_blockwise"
+                    else:
+                        q, sc = quantize_shard(a, quant_block)
+                        encoding = "int8_blockwise"
+                    payload[pk] = q
+                    payload[pk + _SCALES] = sc
+                else:
+                    payload[pk] = _encode(a)
+            layout[key] = {
+                "shape": [int(d) for d in np.shape(arr)],
+                "dtype": dt,
+                "replicated": not sharded,
+                "quantized": encoding != "raw",
+                "encoding": encoding,
+            }
+        manifest = {
+            "version": 1,
+            "step": int(step),
+            "world": world,
+            "mesh": {a: int(self.mesh.shape[a]) for a in self.axes},
+            "format": fmt,
+            "quant_block": quant_block if fmt == FORMAT_INT8 else None,
+            "scale_dtype": "float16",
+            "num_processes": jax.process_count(),
+            "shard_files": [f"shard_{p:05d}.npz"
+                            for p in range(jax.process_count())],
+            "checksums": {},
+            "layout": layout,
+            "param_layout": model_param_layout(self.model),
+            "meta": meta,
+        }
+
         final = os.path.join(ckpt_dir, f"ckpt_{step}")
         os.makedirs(ckpt_dir, exist_ok=True)
         # deterministic SHARED staging dir: every process writes its shard
@@ -582,74 +767,55 @@ class ZeroState:
         # filesystem), process 0 publishes.  The .tmp/.old suffixed names
         # fail latest_checkpoint's int() parse, so they are never restored.
         staging = final + ".tmp"
-        if jax.process_index() == 0 and os.path.isdir(staging):
+        last_err: Optional[BaseException] = None
+        for attempt in range(max(0, int(retries)) + 1):
+            if attempt:
+                time.sleep(backoff * (2 ** (attempt - 1)))
+            try:
+                return self._write_staged(ckpt_dir, final, staging,
+                                          payload, manifest, io_hooks)
+            except OSError as e:       # transient I/O — retry from scratch
+                last_err = e
+                shutil.rmtree(staging, ignore_errors=True)
+        raise CheckpointError(
+            f"checkpoint write to {final} failed after "
+            f"{max(0, int(retries)) + 1} attempt(s): {last_err}"
+        ) from last_err
+
+    def _write_staged(self, ckpt_dir: str, final: str, staging: str,
+                      payload: Dict[str, np.ndarray],
+                      manifest: Dict[str, Any],
+                      io_hooks: Optional[Any]) -> str:
+        """One attempt at the staged write + publish (see :meth:`save`)."""
+        proc = jax.process_index()
+        if proc == 0 and os.path.isdir(staging):
             shutil.rmtree(staging)     # stale leftover from a crashed save
         os.makedirs(staging, exist_ok=True)
         try:
-            payload: Dict[str, np.ndarray] = {}
-            layout: Dict[str, Any] = {}
-            v_prefix = f"opt{_SEP}v"
-            for key, arr in flat.items():
-                sharded = tuple(specs[key]) != ()
-                shards = self._owned_shards(arr, sharded)
-                dt = _dtype_str(arr.dtype)
-                # the nonnegative second moment takes the sqrt-domain
-                # encoder (see quantize_shard_sqrt for why)
-                sqrt_domain = key == v_prefix \
-                    or key.startswith(v_prefix + _SEP)
-                encoding = "raw"
-                for rank, a in sorted(shards.items()):
-                    if rank < 0:  # replicated: stored once, by process 0
-                        if jax.process_index() == 0:
-                            payload[key] = _encode(a)
-                        continue
-                    pk = f"{key}{_RANK}{rank}"
-                    if (fmt == FORMAT_INT8 and a.dtype.kind == "f"
-                            and a.shape[-1] % quant_block == 0):
-                        if sqrt_domain:
-                            q, sc = quantize_shard_sqrt(a, quant_block)
-                            encoding = "uint8_sqrt_blockwise"
-                        else:
-                            q, sc = quantize_shard(a, quant_block)
-                            encoding = "int8_blockwise"
-                        payload[pk] = q
-                        payload[pk + _SCALES] = sc
-                    else:
-                        payload[pk] = _encode(a)
-                layout[key] = {
-                    "shape": [int(d) for d in np.shape(arr)],
-                    "dtype": dt,
-                    "replicated": not sharded,
-                    "quantized": encoding != "raw",
-                    "encoding": encoding,
-                }
-            proc = jax.process_index()
             shard_name = f"shard_{proc:05d}.npz"
-            with open(os.path.join(staging, shard_name), "wb") as f:
+            spath = os.path.join(staging, shard_name)
+            with open(spath, "wb") as f:
                 np.savez(f, **payload)
-            # (multi-process: a barrier would sit here; manifest is last)
-            manifest = {
-                "version": 1,
-                "step": int(step),
-                "world": world,
-                "mesh": {a: int(self.mesh.shape[a]) for a in self.axes},
-                "format": fmt,
-                "quant_block": quant_block if fmt == FORMAT_INT8 else None,
-                "scale_dtype": "float16",
-                "num_processes": jax.process_count(),
-                "shard_files": [f"shard_{p:05d}.npz"
-                                for p in range(jax.process_count())],
-                "layout": layout,
-                "param_layout": model_param_layout(self.model),
-                "meta": meta,
-            }
-            if jax.process_index() == 0:   # manifest is process 0's, last
-                with open(os.path.join(staging, MANIFEST), "w") as f:
+                f.flush()
+                os.fsync(f.fileno())   # durable BEFORE the manifest commit
+            _call_hook(io_hooks, "post_shard", spath)
+            manifest = dict(manifest)
+            manifest["checksums"] = {shard_name: _crc32_file(spath)}
+            # (multi-process: a barrier would sit here, and process 0
+            # would collect every shard's checksum; manifest is last)
+            _call_hook(io_hooks, "pre_manifest", staging)
+            if proc == 0:   # manifest is process 0's, written last
+                mpath = os.path.join(staging, MANIFEST)
+                with open(mpath, "w") as f:
                     json.dump(manifest, f, indent=1)
+                    f.flush()
+                    os.fsync(f.fileno())
+                _fsync_dir(staging)
+            _call_hook(io_hooks, "pre_publish", staging, final)
             # publish (process 0): move any previous ckpt for this step
             # ASIDE before the rename — never a window with neither the
             # old nor the new checkpoint on disk
-            if jax.process_index() == 0:
+            if proc == 0:
                 old = final + ".old"
                 if os.path.isdir(old):
                     shutil.rmtree(old)
@@ -657,6 +823,7 @@ class ZeroState:
                     os.rename(final, old)
                 os.replace(staging, final)   # atomic publish
                 shutil.rmtree(old, ignore_errors=True)
+                _fsync_dir(ckpt_dir)
         finally:
             if os.path.isdir(staging):
                 shutil.rmtree(staging, ignore_errors=True)
@@ -676,6 +843,33 @@ class ZeroState:
         step, tree, meta = load_global(path)
         st = cls(model, mesh, opt_cfg, step=step, meta=meta)
         return st.place_global(tree["params"], tree.get("opt"))
+
+    @classmethod
+    def restore_resilient(cls, model, mesh, opt_cfg: AdamWConfig,
+                          ckpt: str, quarantine: bool = True,
+                          max_fallbacks: int = 8) -> Optional["ZeroState"]:
+        """:meth:`restore` with quarantine-and-fall-back: a checkpoint that
+        fails validation (:class:`CheckpointCorruptError`) is moved aside
+        as ``.corrupt`` (see :func:`quarantine_checkpoint`) and the next
+        older checkpoint is tried, until one loads or none remain (then
+        returns None — the caller starts from scratch)."""
+        tried = 0
+        while True:
+            path = cls._resolve(ckpt)
+            if path is None:
+                return None
+            try:
+                step, tree, meta = load_global(path)
+            except CheckpointCorruptError as e:
+                if not quarantine or tried >= max_fallbacks:
+                    raise
+                tried += 1
+                q = quarantine_checkpoint(path)
+                print(f"[state] corrupt checkpoint quarantined "
+                      f"{path} -> {q}: {e}", flush=True)
+                continue
+            st = cls(model, mesh, opt_cfg, step=step, meta=meta)
+            return st.place_global(tree["params"], tree.get("opt"))
 
     @staticmethod
     def _resolve(ckpt: str) -> Optional[str]:

@@ -245,6 +245,64 @@ def test_engine_run_exact_step_budget(served):
     assert len(eng.run(max_steps=needed)[uid]) == 3
 
 
+class _FakeClock:
+    """Injectable engine clock: tests advance time explicitly."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_engine_request_deadline_timeout(served):
+    """A request past its deadline retires with status 'timeout' and its
+    KV slot returns to the pool; a request that expires while queued never
+    takes a slot.  Requests without deadlines are untouched."""
+    model, mesh, params = served
+    clk = _FakeClock()
+    eng = ServeEngine(model, mesh, params, n_slots=1, kv_len=KV, clock=clk)
+    pr = _prompts(model.cfg, seed=6)[0]
+    # greedy, no EOS: would decode until KV capacity if never timed out
+    slow = eng.submit(pr, max_new_tokens=1000, deadline=5.0)
+    queued = eng.submit(pr, max_new_tokens=4, deadline=5.0)
+    ok = eng.submit(pr, max_new_tokens=4)          # no deadline
+    eng.step()
+    eng.step()
+    assert eng.status[slow] == "active"
+    assert eng.status[queued] == "queued"
+    assert eng.pool.n_free == 0
+    n_before = len(eng.results[slow])
+    assert n_before >= 2                           # made progress first
+    clk.t = 10.0                                   # past both deadlines
+    eng.step()
+    assert eng.status[slow] == "timeout"           # slot reclaimed...
+    assert eng.status[queued] == "timeout"         # ...queue never admitted
+    assert eng.status[ok] == "active"              # freed slot reused NOW
+    assert len(eng.results[slow]) == n_before      # no tokens after timeout
+    assert eng.slot_history[ok] == eng.slot_history[slow]
+    res = eng.run(max_steps=50)
+    assert eng.status[ok] == "done"
+    assert len(res[ok]) == 4
+    assert res[ok] == _reference_greedy(model, mesh, params, pr, 4)
+    assert eng.pool.n_free == 1                    # everything released
+
+
+def test_scheduler_queue_expiry():
+    s = FIFOScheduler(kv_len=64)
+    a = Request(prompt=np.zeros(4, np.int32), deadline=1.0)
+    b = Request(prompt=np.zeros(4, np.int32))
+    c = Request(prompt=np.zeros(4, np.int32), deadline=9.0)
+    for r in (a, b, c):
+        s.submit(r)
+    assert s.expire(0.5) == []
+    dropped = s.expire(2.0)
+    assert [r.uid for r in dropped] == [a.uid]
+    assert len(s) == 2                 # b (no deadline) and c survive
+    adm = s.admit(4)
+    assert [r.uid for r, _ in adm] == [b.uid, c.uid]
+
+
 def test_engine_keeps_custom_scheduler(served):
     """An (empty, hence falsy) user-supplied scheduler must not be
     silently replaced by the default one."""

@@ -68,6 +68,28 @@ def test_latest_skips_foreign_files(tmp_path):
     assert ckpt.latest(str(tmp_path / "missing")) is None
 
 
+def test_latest_ignores_staging_and_quarantine(tmp_path):
+    """A crash can leave a fully-populated staging dir — shards AND
+    manifest, killed between the manifest fsync and the atomic rename.
+    ``latest()`` must never select it (nor a quarantined checkpoint),
+    even when its step number is the highest in the directory."""
+    from repro.train import checkpoint as ckpt
+
+    d = tmp_path / "c"
+    d.mkdir()
+    good = d / "ckpt_4"
+    good.mkdir()
+    (good / "manifest.json").write_text("{}")
+    staging = d / "ckpt_9.tmp"            # crash-left, manifest included
+    staging.mkdir()
+    (staging / "shard_00000.npz").write_bytes(b"x")
+    (staging / "manifest.json").write_text("{}")
+    quarantined = d / "ckpt_12.corrupt"
+    quarantined.mkdir()
+    (quarantined / "manifest.json").write_text("{}")
+    assert ckpt.latest(str(d)) == str(good)
+
+
 # ---------------------------------------------------------------------------
 # fast: quantized payload math
 # ---------------------------------------------------------------------------
@@ -197,6 +219,50 @@ def test_legacy_npz_compat(tmp_path):
     for k, v in st2.params.items():
         np.testing.assert_array_equal(np.asarray(jax.device_get(v)),
                                       np.asarray(p_host[k]))
+
+
+def test_restore_corrupt_checkpoint_fallback(tmp_path):
+    """Bit-rot in the newest checkpoint: the checksum catches it with a
+    clear error, and ``restore_resilient`` quarantines the damaged dir
+    and falls back to the previous intact one."""
+    import jax
+    from repro.testing.faults import corrupt_shard
+    from repro.train.state import (CheckpointCorruptError, ZeroState,
+                                   load_global)
+
+    mesh, model, opt_cfg, st = _tiny_state()
+    p_host = jax.device_get(st.params)
+    st.save(str(tmp_path), 1)
+    st.save(str(tmp_path), 2)
+    corrupt_shard(str(tmp_path / "ckpt_2"))
+    with pytest.raises(CheckpointCorruptError, match="checksum mismatch"):
+        load_global(str(tmp_path / "ckpt_2"))
+    st2 = ZeroState.restore_resilient(model, mesh, opt_cfg, str(tmp_path))
+    assert st2 is not None and st2.step == 1
+    assert (tmp_path / "ckpt_2.corrupt").is_dir()   # quarantined aside
+    for k, v in st2.params.items():
+        np.testing.assert_array_equal(np.asarray(jax.device_get(v)),
+                                      np.asarray(p_host[k]))
+
+
+def test_restore_truncated_shard_exhausts_to_none(tmp_path):
+    """A truncated shard (interrupted write) raises a clear corrupt error
+    rather than a numpy stack trace; with EVERY checkpoint damaged,
+    ``restore_resilient`` returns None (fresh start) instead of raising."""
+    from repro.testing.faults import truncate_shard
+    from repro.train.state import (CheckpointCorruptError, ZeroState,
+                                   load_global)
+
+    mesh, model, opt_cfg, st = _tiny_state()
+    st.save(str(tmp_path), 3)
+    truncate_shard(str(tmp_path / "ckpt_3"))
+    with pytest.raises(CheckpointCorruptError):
+        load_global(str(tmp_path / "ckpt_3"))
+    assert ZeroState.restore_resilient(model, mesh, opt_cfg,
+                                       str(tmp_path)) is None
+    assert (tmp_path / "ckpt_3.corrupt").is_dir()
+    # plain restore on the now-empty dir is also a clean None
+    assert ZeroState.restore(model, mesh, opt_cfg, str(tmp_path)) is None
 
 
 def test_serve_imports_nothing_from_trainer():
