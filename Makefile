@@ -9,7 +9,7 @@ MP8       = XLA_FLAGS=--xla_force_host_platform_device_count=8
 PYPATH    = PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH}
 
 .PHONY: test test-fast bench-smoke bench ckpt-smoke serve-smoke moe-smoke \
-        ring-smoke fault-smoke
+        ring-smoke fault-smoke kernel-smoke
 
 # tier-1 verify (ROADMAP.md): full suite, stop on first failure
 test:
@@ -82,6 +82,29 @@ fault-smoke:
 	           timeout=1800); \
 	print('fault smoke OK: async ckpt overlap, bit-exact resume, live '\
 	      'reshard, corrupt fallback, real-signal crash/drain verified')"
+
+# kernel-backend smoke (kernels/ops.py dispatch seam, DESIGN.md §7):
+# interpret-mode parity suite for every Pallas kernel body (quant /
+# dequant / fused reorder+quant / dequant-reduce-requant / INT8
+# dequant-GEMM vs the pure-jnp oracles), then the schedule- and
+# serve-level composition checks with the backend forced to interpret
+# (depth sweep bit-exact, fused INT8 serving head == staged head,
+# xla-vs-interpret training bit-identity), then a kernel_bench smoke run
+kernel-smoke:
+	$(PYPATH) $(PY) -m pytest -x -q tests/test_kernels.py \
+		-k "not 8dev"
+	$(PYPATH) $(PY) -c "\
+	from repro.testing.subproc import run_checks; \
+	run_checks(['check_kernel_backend_depth_sweep', \
+	            'check_qwz_gemm_head_matches_staged', \
+	            'check_kernel_backend_train_bitexact'], n_devices=8, \
+	           timeout=2400); \
+	run_checks(['check_serve_engine_continuous_batching'], n_devices=8, \
+	           timeout=1800, \
+	           extra_env={'REPRO_KERNEL_BACKEND': 'interpret'}); \
+	print('kernel smoke OK: interpret-mode parity + kernel-backed '\
+	      'schedule/serve bit-exactness verified')"
+	$(PYPATH) $(PY) -m benchmarks.kernel_bench --smoke
 
 # overlap benchmark + suite smoke in one command: verifies the prefetched
 # schedule from compiled HLO on the 8-device CPU mesh, then prints the

@@ -34,13 +34,15 @@ from repro.core.quant import (
 # TPU (incl. the fused reorder+quant and dequant-reduce-quant of paper §4.2),
 # bit-identical pure-jnp on CPU.
 from repro.core.compat import axis_size as _axis_size
-from repro.kernels.ops import (
-    dequant_reduce,
-    dequant_reduce_quant,
-    dequantize_blockwise,
-    quantize_blockwise,
-    quantize_reordered,
-)
+# Module import (not from-import): kernels.ops also reaches back into
+# repro.core lazily, so names must resolve at call time, not import time.
+from repro.kernels import ops as _kops
+
+dequant_reduce = lambda *a, **k: _kops.dequant_reduce(*a, **k)  # noqa: E731
+dequant_reduce_quant = lambda *a, **k: _kops.dequant_reduce_quant(*a, **k)  # noqa: E731
+dequantize_blockwise = lambda *a, **k: _kops.dequantize_blockwise(*a, **k)  # noqa: E731
+quantize_blockwise = lambda *a, **k: _kops.quantize_blockwise(*a, **k)  # noqa: E731
+quantize_reordered = lambda *a, **k: _kops.quantize_reordered(*a, **k)  # noqa: E731
 
 Array = jax.Array
 Axes = Union[str, Tuple[str, ...]]
@@ -133,6 +135,27 @@ def qwz_all_gather(
         payload_g.reshape(world, per), scale_g.reshape(world, 1), cfg.bits, out_dtype
     )
     return vals.reshape(-1)
+
+
+def qwz_all_gather_quant(
+    shard: Array,
+    axes: Axes,
+    cfg: QuantConfig,
+) -> Tuple[Array, Array]:
+    """qwZ all-gather that STAYS quantized: (payload_g, scales_g).
+
+    Same wire traffic as :func:`qwz_all_gather`, but the trailing dequant is
+    omitted so a fused consumer (the serving INT8 dequant-GEMM head,
+    kernels/dequant_matmul.py) can apply the scales inside its own tile
+    loop — the gathered bf16 weight matrix never materializes in HBM.
+    """
+    n = shard.shape[0]
+    if n % cfg.block_size:
+        raise ValueError(f"shard len {n} % block {cfg.block_size} != 0")
+    payload, scales = quantize_blockwise(shard, cfg)
+    payload_g = lax.all_gather(payload, _axes_tuple(axes), tiled=True)
+    scales_g = lax.all_gather(scales, _axes_tuple(axes), tiled=True)
+    return payload_g, scales_g
 
 
 # ---------------------------------------------------------------------------

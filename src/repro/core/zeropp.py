@@ -56,6 +56,11 @@ class ZeroConfig:
     qwz_bits: int = 8
     qwz_block: int = 256
     qwz_blocked: bool = True   # False = paper's diverging non-blocked ablation
+    # serving head: consume the qwZ-gathered INT8 payload directly through
+    # the fused dequant-GEMM kernel (kernels/dequant_matmul.py) instead of
+    # dequantizing the whole chunk first.  Only takes effect where the
+    # layout is eligible (see qwz_gemm_eligible); False = always staged.
+    qwz_gemm: bool = True
     # hpZ (§3.2).  ``hpz_axes=None`` -> secondary group = (intra_axis,).
     # A wider tuple (e.g. ("data","model") on the multi-pod mesh = one whole
     # pod) is the paper's "multiple compute nodes" secondary group: it costs
@@ -162,6 +167,36 @@ def fwd_gather(primary: Array, z: ZeroConfig) -> Array:
                                  blocked=z.qwz_blocked)
     return cl.baseline_all_gather(primary.astype(z.param_dtype), z.dp_axes,
                                   out_dtype=z.compute_dtype)
+
+
+def fwd_gather_quant(primary: Array, z: ZeroConfig) -> Tuple[Array, Array]:
+    """qwZ forward gather that keeps the payload quantized.
+
+    Returns ``(payload_g int8, scales_g f32)`` for a fused consumer (the
+    serving INT8 dequant-GEMM head).  Caller must have checked
+    :func:`qwz_gemm_eligible`.
+    """
+    return cl.qwz_all_gather_quant(primary, z.dp_axes, z.qwz_cfg)
+
+
+def qwz_gemm_eligible(z: ZeroConfig, rows: int, d: int) -> bool:
+    """Can a (rows, d) weight chunk at flat offset 0 feed the fused INT8
+    dequant-GEMM directly from its gathered qwZ payload?
+
+    Requires INT8 blocked qwZ, and a scale layout that maps onto per-row
+    scale groups: either each row holds whole quant blocks (d % block == 0,
+    NB = d/block scales per row) or each block holds whole rows
+    (block % d == 0 with rows % (block/d) == 0 — every row lies inside ONE
+    block, so its scale is a broadcast).  Anything else (including int4,
+    whose packed nibbles straddle rows) stays on the staged dequant path.
+    """
+    if not (z.distributed and z.qwz and z.qwz_blocked and z.qwz_gemm
+            and z.qwz_bits == 8):
+        return False
+    b = z.qwz_block
+    if (rows * d) % b:
+        return False
+    return d % b == 0 or (b % d == 0 and rows % (b // d) == 0)
 
 
 def grad_reduce(dW: Array, z: ZeroConfig) -> Array:

@@ -14,11 +14,15 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import platform
 from repro.kernels.flash_attention import flash_bwd_pallas, flash_fwd_pallas
 
 
 def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    # Shared platform probe (kernels/platform.py) — honours
+    # $REPRO_KERNEL_BACKEND and raises if 'pallas' is forced off-TPU,
+    # instead of this module and kernels/ops.py probing independently.
+    return platform.interpret_flag()
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))

@@ -1,38 +1,75 @@
 """Backend-dispatching wrappers over the quantization kernels.
 
-Hot-path quantization call sites (core/collectives.py) go through this
-module: on TPU they hit the Pallas kernels; on CPU (tests, dry-run,
-benchmarks) they hit the pure-jnp reference, which is numerically identical
-(the kernel tests prove it bit-exactly for round-to-nearest-even inputs).
+This module is the SEAM between the numerical hot path and its
+implementations: every quantized byte on the training and serving hot path
+(core/collectives.py qwZ/qgZ, the serving INT8 head GEMM in
+models/model.py) calls through here, and nothing outside ``repro.kernels``
+imports a kernel module directly.  Backends (see kernels/platform.py for
+resolution and the off-TPU error contract):
 
-``FORCE`` pins the implementation for tests/benchmarks:
-  None       -> by backend (tpu: pallas, else ref)
-  "ref"      -> pure jnp always
-  "pallas"   -> compiled pallas (TPU only)
-  "interpret"-> pallas interpret mode (runs the kernel body on CPU; used by
-                the kernel-vs-ref test sweeps)
+  ``pallas``    compiled Pallas TPU kernels (TPU only, hard error elsewhere)
+  ``interpret`` the same kernel bodies through the Pallas interpreter —
+                CPU CI executes the real kernel code, bit-for-bit
+  ``xla``       pure-jnp references (core.quant / kernels.ref); alias "ref"
+
+Selection: ``set_backend()`` / ``use_backend()`` here, the
+``REPRO_KERNEL_BACKEND`` environment variable, or the platform default
+(tpu: pallas, else xla).  The legacy ``FORCE`` module global is still
+honoured (oldest precedence name for ``set_backend``).
+
+Stochastic rounding (``cfg.stochastic`` / a PRNG key) always routes to the
+``xla`` reference: threading jax PRNG keys into the kernels is not yet
+implemented, and the dispatch layer must never be silently wrong — the
+fallback is explicit here and documented in DESIGN.md §7.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+import contextlib
+from typing import TYPE_CHECKING, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.quant import QuantConfig
+if TYPE_CHECKING:  # runtime import would be circular: core.collectives imports us
+    from repro.core.quant import QuantConfig
+
+from repro.kernels import platform
 from repro.kernels import ref as _ref
 from repro.kernels import quant_block as _qb
 from repro.kernels import fused_dequant_reduce_quant as _fq
 
 Array = jax.Array
 
+# Programmatic override; None defers to $REPRO_KERNEL_BACKEND, then the
+# platform default.  Prefer set_backend()/use_backend() over writing this.
 FORCE: Optional[str] = None
 
 
-def _mode() -> str:
-    if FORCE is not None:
-        return FORCE
-    return "pallas" if jax.default_backend() == "tpu" else "ref"
+def set_backend(name: Optional[str]) -> None:
+    """Pin the kernel backend process-wide (None restores resolution via
+    env/platform).  Validates eagerly: 'pallas' off-TPU raises here, at
+    configuration time, not at the first hot-path call."""
+    global FORCE
+    if name is not None:
+        platform.resolve(name)  # validate, incl. the off-TPU error
+    FORCE = name
+
+
+@contextlib.contextmanager
+def use_backend(name: Optional[str]):
+    """Scoped :func:`set_backend` (tests, benchmarks)."""
+    global FORCE
+    old = FORCE
+    set_backend(name)
+    try:
+        yield
+    finally:
+        FORCE = old
+
+
+def backend() -> str:
+    """The backend the next kernel call will dispatch to."""
+    return platform.resolve(FORCE)
 
 
 def _as2d(x: Array) -> Tuple[Array, Tuple[int, ...]]:
@@ -45,8 +82,9 @@ def _as2d(x: Array) -> Tuple[Array, Tuple[int, ...]]:
 
 def quantize_blockwise(x: Array, cfg: QuantConfig,
                        key: Optional[Array] = None) -> Tuple[Array, Array]:
-    mode = _mode()
-    if mode == "ref" or cfg.stochastic or key is not None:
+    """Blockwise quantize the trailing dim (qwZ shard quantize; qgZ hop 1)."""
+    mode = backend()
+    if mode == "xla" or cfg.stochastic or key is not None:
         from repro.core.quant import quantize_blockwise as q
         return q(x, cfg, key)
     x2, lead = _as2d(x)
@@ -56,8 +94,10 @@ def quantize_blockwise(x: Array, cfg: QuantConfig,
 
 def dequantize_blockwise(payload: Array, scales: Array, cfg: QuantConfig,
                          out_dtype=jnp.float32) -> Array:
-    mode = _mode()
-    if mode == "ref":
+    """Inverse of :func:`quantize_blockwise`; writes ``out_dtype`` (the qwZ
+    gather passes bf16) directly — no fp32 materialization of the output."""
+    mode = backend()
+    if mode == "xla":
         from repro.core.quant import dequantize_blockwise as d
         return d(payload, scales, cfg, out_dtype)
     p2, lead = _as2d(payload)
@@ -69,9 +109,10 @@ def dequantize_blockwise(payload: Array, scales: Array, cfg: QuantConfig,
 
 def quantize_reordered(x: Array, cfg: QuantConfig,
                        key: Optional[Array] = None) -> Tuple[Array, Array]:
-    """(Y, X, L) -> transpose to (X, Y, L), quantize trailing dim (fused)."""
-    mode = _mode()
-    if mode == "ref" or cfg.stochastic or key is not None:
+    """(Y, X, L) -> transpose to (X, Y, L), quantize trailing dim — qgZ
+    step 1 with the remap folded into the kernel's BlockSpec index_map."""
+    mode = backend()
+    if mode == "xla" or cfg.stochastic or key is not None:
         xt = jnp.swapaxes(x, 0, 1)
         from repro.core.quant import quantize_blockwise as q
         return q(xt, cfg, key)
@@ -82,8 +123,8 @@ def quantize_reordered(x: Array, cfg: QuantConfig,
 def dequant_reduce(payload: Array, scales: Array, cfg: QuantConfig,
                    out_dtype=jnp.float32) -> Array:
     """Sum N quantized contributions in fp32: (N, P), (N, NB) -> (C,)."""
-    mode = _mode()
-    if mode == "ref":
+    mode = backend()
+    if mode == "xla":
         return _ref.dequant_reduce_ref(payload, scales, cfg, out_dtype)
     return _fq.dequant_reduce_pallas(payload, scales, cfg, out_dtype,
                                      interpret=(mode == "interpret"))
@@ -93,10 +134,35 @@ def dequant_reduce_quant(payload: Array, scales: Array, cfg_in: QuantConfig,
                          cfg_out: QuantConfig,
                          key: Optional[Array] = None) -> Tuple[Array, Array]:
     """Fused dequant -> fp32 reduce -> requant (qgZ intra-hop, §4.2)."""
-    mode = _mode()
-    if mode == "ref" or cfg_out.stochastic or key is not None:
+    mode = backend()
+    if mode == "xla" or cfg_out.stochastic or key is not None:
         acc = _ref.dequant_reduce_ref(payload, scales, cfg_in, jnp.float32)
         from repro.core.quant import quantize_blockwise as q
         return q(acc, cfg_out, key)
     return _fq.dequant_reduce_quant_pallas(payload, scales, cfg_in, cfg_out,
                                            interpret=(mode == "interpret"))
+
+
+def dequant_matmul(x: Array, payload: Array, scales: Array,
+                   compute_dtype=jnp.bfloat16,
+                   out_dtype=jnp.float32) -> Array:
+    """Fused INT8-weight x activation GEMM: ``x @ dequant(payload).T``.
+
+    x: (T, K) activations; payload: (N, K) int8 rows; scales: (N, NB)
+    fp32 with K % NB == 0 (each row's K splits into NB scale groups).
+    Dequantized weights round through ``compute_dtype`` (bf16) before the
+    MXU — exactly the staged gather-dequant-einsum math — so the ``xla``
+    backend is bit-identical to the staged path; the kernel applies the
+    scales inside its k-tile loop (INT8 rows stream from HBM at 1 B/elem,
+    never materializing the bf16 weight matrix).
+    """
+    mode = backend()
+    if mode == "xla":
+        return _ref.dequant_matmul_ref(x, payload, scales,
+                                       compute_dtype=compute_dtype,
+                                       out_dtype=out_dtype)
+    from repro.kernels import dequant_matmul as _dm
+    return _dm.dequant_matmul_pallas(x, payload, scales,
+                                     compute_dtype=compute_dtype,
+                                     out_dtype=out_dtype,
+                                     interpret=(mode == "interpret"))

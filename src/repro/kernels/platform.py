@@ -1,0 +1,87 @@
+"""The ONE platform probe + backend resolver for the kernel layer.
+
+Every kernel entry point (quant ops in :mod:`repro.kernels.ops`, flash
+attention in :mod:`repro.kernels.flash_ops`) resolves its implementation
+through this module, so "which backend am I on?" is answered exactly once
+and cannot disagree between call sites (the old ``ops._mode`` /
+``flash_ops._interpret`` pair could).
+
+Backends:
+
+  ``pallas``    compiled Pallas TPU kernels.  Requesting it off-TPU is a
+                hard error — Pallas TPU kernels either miscompile or fall
+                over on other platforms, and a silent fallback would make
+                every benchmark number a lie.
+  ``interpret`` the same kernel bodies run through the Pallas interpreter
+                (pure XLA ops, any platform).  Slow; exists so CPU CI can
+                execute the real kernel code paths bit-for-bit.
+  ``xla``       the pure-jnp reference implementations (core.quant /
+                kernels.ref).  The numerical source of truth and the
+                fallback for features the kernels do not cover
+                (stochastic rounding).  ``ref`` is accepted as an alias.
+
+Resolution order (first hit wins):
+
+  1. an explicit force (``ops.set_backend`` / ``ops.use_backend`` /
+     the legacy ``ops.FORCE`` module global),
+  2. the ``REPRO_KERNEL_BACKEND`` environment variable,
+  3. platform default: ``pallas`` on TPU, ``xla`` elsewhere.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+ENV_VAR = "REPRO_KERNEL_BACKEND"
+
+BACKENDS = ("pallas", "interpret", "xla")
+_ALIASES = {"ref": "xla"}
+
+
+def is_tpu() -> bool:
+    """True iff jax's default backend is a TPU (the only platform the
+    compiled Pallas kernels in this package target)."""
+    return jax.default_backend() == "tpu"
+
+
+def canonical(name: str) -> str:
+    """Normalize a backend name; raise on anything unknown."""
+    name = _ALIASES.get(name, name)
+    if name not in BACKENDS:
+        raise ValueError(
+            f"unknown kernel backend {name!r}; expected one of "
+            f"{BACKENDS} (or alias 'ref' for 'xla')")
+    return name
+
+
+def resolve(force: Optional[str] = None) -> str:
+    """Resolve the active kernel backend (see module docstring for the
+    precedence).  Raises RuntimeError if ``pallas`` is selected on a
+    non-TPU platform — never a silent fallback."""
+    if force is not None:
+        mode = canonical(force)
+    else:
+        env = os.environ.get(ENV_VAR)
+        if env:
+            mode = canonical(env)
+        else:
+            mode = "pallas" if is_tpu() else "xla"
+    if mode == "pallas" and not is_tpu():
+        src = "forced" if force is not None else (
+            f"${ENV_VAR}" if os.environ.get(ENV_VAR) else "default")
+        raise RuntimeError(
+            f"kernel backend 'pallas' ({src}) requires a TPU, but jax's "
+            f"default backend is {jax.default_backend()!r}.  Use "
+            f"'interpret' to run the kernel bodies on this platform, or "
+            f"'xla' for the pure-jnp reference.")
+    return mode
+
+
+def interpret_flag(force: Optional[str] = None) -> bool:
+    """The ``interpret=`` argument a ``pallas_call`` site should pass for
+    the resolved backend.  Only meaningful for kernels without an ``xla``
+    reference split at the dispatch layer (flash attention): ``pallas``
+    compiles, anything else interprets."""
+    return resolve(force) != "pallas"

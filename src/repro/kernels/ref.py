@@ -67,6 +67,29 @@ def dequant_reduce_ref(payload: Array, scales: Array, cfg: QuantConfig,
     return jnp.sum(deq, axis=0).astype(out_dtype)
 
 
+def dequant_matmul_ref(x: Array, payload: Array, scales: Array,
+                       compute_dtype=jnp.bfloat16,
+                       out_dtype=jnp.float32) -> Array:
+    """Staged oracle for the fused INT8 dequant-GEMM: dequantize the whole
+    weight matrix through ``compute_dtype`` rounding, then one einsum with
+    fp32 accumulation.  Elementwise identical to ``dequantize_blockwise``
+    (fp32 scale multiply, then .astype) + the serving head einsum — the
+    ``xla`` kernel backend dispatches here, so it is bit-identical to the
+    pre-fusion staged hot path.
+
+    x: (T, K); payload: (N, K) int8; scales: (N, NB) with K % NB == 0.
+    """
+    N, K = payload.shape
+    nb = scales.shape[-1]
+    assert K % nb == 0, (K, nb)
+    kb = K // nb
+    w = (payload.reshape(N, nb, kb).astype(jnp.float32)
+         * scales[..., None]).reshape(N, K).astype(compute_dtype)
+    out = jnp.einsum("tk,nk->tn", x, w,
+                     preferred_element_type=jnp.float32)
+    return out.astype(out_dtype)
+
+
 def dequant_reduce_quant_ref(
     payload: Array, scales: Array, cfg_in: QuantConfig, cfg_out: QuantConfig,
 ) -> Tuple[Array, Array]:

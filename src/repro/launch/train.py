@@ -239,7 +239,16 @@ def main():
                     help="sleep this long inside every shard write")
     ap.add_argument("--fault-flaky-writes", type=int, default=None,
                     help="fail the first N shard writes with OSError")
+    ap.add_argument("--kernel-backend", default=None,
+                    choices=["pallas", "interpret", "xla", "ref"],
+                    help="quant-kernel backend (kernels/ops.py); default "
+                         "resolves $REPRO_KERNEL_BACKEND then platform "
+                         "(pallas on TPU, xla elsewhere)")
     args = ap.parse_args()
+
+    if args.kernel_backend is not None:
+        from repro.kernels import ops as kops
+        kops.set_backend(args.kernel_backend)
 
     if args.elastic:
         return run_elastic(args)

@@ -22,7 +22,14 @@ from repro.core.schedule import (zero_apply_scan, zero_chunk_scan,
                                  zero_chunk_scan_hpz,
                                  zero_chunk_scan_inference,
                                  zero_scan_inference)
-from repro.core.zeropp import ZeroConfig, zero_apply, zero_apply_inference
+from repro.core.zeropp import (
+    ZeroConfig,
+    fwd_gather_quant,
+    qwz_gemm_eligible,
+    zero_apply,
+    zero_apply_inference,
+)
+from repro.kernels import ops as kops
 from repro.models import attention as attn_lib
 from repro.models import layers as nn
 from repro.models import moe as moe_lib
@@ -520,12 +527,35 @@ class Model:
 
         hn = zi(norm_fn)(params["head"], h_last)
 
-        def chunk_f(Wc, hn):
-            p = self.unemb_spec.unpack(Wc.astype(z.compute_dtype))
-            return jnp.einsum("bsd,vd->bsv", hn, p["unemb"],
-                              preferred_element_type=jnp.float32)
+        Vc, d = self.vchunk, cfg.d_model
+        if qwz_gemm_eligible(z, Vc, d):
+            # fused head: gather the qwZ payload WITHOUT dequantizing and
+            # let the dequant-GEMM kernel apply the scales in its k-tile
+            # loop — the bf16 (Vc, d) chunk never materializes.  The unemb
+            # entry sits at flat offset 0 of its spec, so payload rows are
+            # a plain reshape; the two eligible scale layouts are per-row
+            # groups (d % block == 0) or one-block-covers-whole-rows
+            # (block % d == 0).
+            blk = z.qwz_block
 
-        ap = zi(chunk_f)
+            def ap(Wc, hn):
+                pq, sq = fwd_gather_quant(Wc, z)
+                pr = pq[: Vc * d].reshape(Vc, d)
+                if d % blk == 0:
+                    sr = sq[: Vc * (d // blk)].reshape(Vc, d // blk)
+                else:
+                    sr = jnp.repeat(sq[: Vc // (blk // d)], blk // d)[:, None]
+                out2 = kops.dequant_matmul(
+                    hn.reshape(-1, d), pr, sr,
+                    compute_dtype=z.compute_dtype)
+                return out2.reshape(hn.shape[0], hn.shape[1], Vc)
+        else:
+            def chunk_f(Wc, hn):
+                p = self.unemb_spec.unpack(Wc.astype(z.compute_dtype))
+                return jnp.einsum("bsd,vd->bsv", hn, p["unemb"],
+                                  preferred_element_type=jnp.float32)
+
+            ap = zi(chunk_f)
 
         def body(carry, Wc):
             return carry, ap(Wc, hn)

@@ -81,8 +81,15 @@ class ServeEngine:
                  scheduler: Optional[FIFOScheduler] = None,
                  cache_dtype=None, donate: bool = True,
                  prefetch: Optional[int] = None,
+                 kernel_backend: Optional[str] = None,
                  clock: Callable[[], float] = time.monotonic):
         cfg = model.cfg
+        if kernel_backend is not None:
+            # pin the quant-kernel backend (pallas/interpret/xla) for every
+            # step this engine compiles — validated eagerly, so a 'pallas'
+            # request off-TPU fails here instead of mid-serve
+            from repro.kernels import ops as kops
+            kops.set_backend(kernel_backend)
         if prefetch is not None:
             # deepen the weight-gather ring for the whole serving path:
             # decode batches are small, so on slow interconnects one

@@ -1357,3 +1357,94 @@ def check_elastic_flaky_io_retry():
     assert ws["completed"] == 2 and ws["failed"] == 0, ws
     assert flaky.remaining == 0 and flaky.calls >= 3   # 2 fails + retries
     assert os.path.basename(latest_checkpoint(d)) == "ckpt_4"
+
+
+# ---------------------------------------------------------------------------
+# kernel backend seam (kernels/ops.py + kernels/platform.py) — DESIGN.md §7
+# ---------------------------------------------------------------------------
+
+def check_kernel_backend_depth_sweep():
+    """The prefetch ring composes with kernel-backed quant: with the
+    backend forced to `interpret` (the real Pallas kernel bodies, run
+    through the interpreter), the dense depth sweep stays bit-identical
+    in losses AND gradients to the synchronous reference — same assertion
+    as check_prefetch_depth_sweep, different quant implementation."""
+    from repro.kernels import ops
+    with ops.use_backend("interpret"):
+        assert ops.backend() == "interpret"
+        _assert_depth_sweep("gpt-350m", (1, 2, 3))
+
+
+def check_kernel_backend_serve_engine():
+    """The serve-engine bit-identity check (engine output == raw
+    per-request prefill+decode, INT8 checkpoint boot) passes unchanged
+    with the kernel backend forced to `interpret` — covering the fused
+    INT8 dequant-GEMM serving head, which both sides dispatch through
+    kernels/ops.py."""
+    from repro.kernels import ops
+    with ops.use_backend("interpret"):
+        check_serve_engine_continuous_batching()
+
+
+def check_kernel_backend_train_bitexact():
+    """Switching the quant backend must not move the training trajectory:
+    `interpret` (Pallas kernel bodies) and `xla` (pure-jnp reference)
+    loss curves are bit-identical — the kernels ARE the reference math
+    (quantize/dequant/fused-reduce parity is exact, not approximate)."""
+    from repro.kernels import ops
+    curves = {}
+    for be in ("xla", "interpret"):
+        with ops.use_backend(be):
+            mesh, arch, model, opt_cfg, ts, lm = _prefetch_env(1)
+            _, _, losses = _run_steps(mesh, arch, model, opt_cfg, ts, lm,
+                                      3, 16)
+            curves[be] = losses
+    assert curves["xla"] == curves["interpret"], curves
+
+
+def check_qwz_gemm_head_matches_staged():
+    """The fused INT8 dequant-GEMM serving head (qwz_gemm=True: the decode
+    GEMM eats the gathered INT8 payload, scales applied in the k-tile
+    loop) must produce the same logits as the staged
+    gather-dequant-einsum head (qwz_gemm=False) — tight allclose (fp32
+    accumulation-order only) and identical argmax, under both the xla
+    and interpret backends."""
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding
+    from repro.configs import get_config
+    from repro.kernels import ops
+    from repro.models.model import Model
+    from repro.train import serve as serve_lib
+    from repro.train.policy import make_policy
+    from repro.train.state import param_specs
+
+    mesh = _mesh2(model=2)
+    world = jax.device_count()
+    arch = get_config("qwen3-0.6b").reduced()
+    rng = np.random.default_rng(5)
+    toks = rng.integers(0, arch.vocab, size=(2, 12)).astype(np.int32)
+
+    outs = {}
+    for fused in (True, False):
+        pol = make_policy(arch, tuple(mesh.axis_names), qwz_gemm=fused)
+        model = Model(arch, pol.zcfg, world=world)
+        params = model.init_params(jax.random.PRNGKey(2), dtype=jnp.float32)
+        p_specs = param_specs(model, tuple(mesh.axis_names))
+        params = {k: jax.device_put(v, NamedSharding(mesh, p_specs[k]))
+                  for k, v in params.items()}
+        for be in ("xla", "interpret"):
+            with ops.use_backend(be):
+                ps = serve_lib.build_prefill_step(model, mesh, (),
+                                                  ("model",))
+                batch = {"tokens": jax.device_put(
+                    toks, NamedSharding(mesh, ps.in_specs[1]["tokens"]))}
+                logits, _ = ps.fn(params, batch)
+                outs[(fused, be)] = np.asarray(logits)
+
+    want = outs[(False, "xla")]                  # the staged reference head
+    for k, got in outs.items():
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5,
+                                   err_msg=str(k))
+        assert (got.argmax(-1) == want.argmax(-1)).all(), k

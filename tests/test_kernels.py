@@ -201,3 +201,242 @@ def test_ops_dispatch_ref_equals_interpret():
         ops.FORCE = old
     np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
     np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fused INT8 dequant-GEMM (kernels/dequant_matmul.py)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.dequant_matmul import dequant_matmul_pallas
+
+GEMM_SWEEP = [
+    # (T, N, K, n_scale_groups, x_dtype) — single- and multi-k-tile,
+    # per-row scale groups and the one-scale-per-row broadcast layout
+    (8, 64, 256, 2, jnp.float32),
+    (4, 128, 64, 1, jnp.bfloat16),
+    (16, 96, 384, 3, jnp.float32),
+    (3, 40, 512, 4, jnp.bfloat16),
+    (16, 128, 2048, 8, jnp.float32),   # k-tiled: 4 accumulation steps
+    (5, 64, 1536, 12, jnp.float32),    # odd row count, k-tiled
+]
+
+
+@pytest.mark.parametrize("T,N,K,nb,xdtype", GEMM_SWEEP)
+def test_dequant_matmul_matches_ref(T, N, K, nb, xdtype):
+    """Kernel vs staged oracle.  Tolerance is fp32 accumulation ORDER only
+    (k-tiled partial sums); the elementwise dequant math is identical."""
+    cfg = QuantConfig(bits=8, block_size=K // nb)
+    x = _rand((T, K), xdtype, seed=T * K)
+    w = _rand((N, K), jnp.float32, seed=N + K)
+    p, s = ref.quantize_ref(w, cfg)
+    got = _jit(dequant_matmul_pallas, **INTERP)(x, p, s)
+    want = _jit(ref.dequant_matmul_ref)(x, p, s)
+    scale = np.abs(np.asarray(want)).max() + 1e-9
+    np.testing.assert_allclose(np.asarray(got) / scale,
+                               np.asarray(want) / scale, atol=2e-6)
+
+
+def test_dequant_matmul_ref_is_staged_math():
+    """The oracle == dequantize_blockwise + einsum, bit for bit: the `xla`
+    dispatch path must be indistinguishable from the pre-fusion staged
+    serving head."""
+    cfg = QuantConfig(bits=8, block_size=128)
+    x = _rand((6, 512), jnp.float32, seed=3)
+    w = _rand((32, 512), jnp.float32, seed=4)
+    p, s = ref.quantize_ref(w, cfg)
+
+    def staged(x, p, s):
+        wd = dequantize_blockwise(p, s, cfg, jnp.bfloat16)
+        return jnp.einsum("tk,nk->tn", x, wd,
+                          preferred_element_type=jnp.float32)
+
+    got = _jit(ref.dequant_matmul_ref)(x, p, s)
+    want = _jit(staged)(x, p, s)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_ops_dequant_matmul_dispatch():
+    from repro.kernels import ops
+    cfg = QuantConfig(bits=8, block_size=256)
+    x = _rand((4, 1024), jnp.float32, seed=9)
+    w = _rand((16, 1024), jnp.float32, seed=10)
+    p, s = ref.quantize_ref(w, cfg)
+    with ops.use_backend("xla"):
+        a = ops.dequant_matmul(x, p, s)
+    with ops.use_backend("interpret"):
+        b = ops.dequant_matmul(x, p, s)
+    scale = np.abs(np.asarray(a)).max() + 1e-9
+    np.testing.assert_allclose(np.asarray(a) / scale, np.asarray(b) / scale,
+                               atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# backend seam (kernels/platform.py + ops.py resolution)
+# ---------------------------------------------------------------------------
+
+def test_platform_resolution_order(monkeypatch):
+    from repro.kernels import platform
+    monkeypatch.delenv(platform.ENV_VAR, raising=False)
+    assert platform.resolve() == "xla"                 # CPU default
+    monkeypatch.setenv(platform.ENV_VAR, "interpret")
+    assert platform.resolve() == "interpret"           # env beats default
+    assert platform.resolve("xla") == "xla"            # force beats env
+    assert platform.resolve("ref") == "xla"            # alias
+    with pytest.raises(ValueError):
+        platform.resolve("cuda")
+
+
+def test_platform_pallas_off_tpu_raises(monkeypatch):
+    """'pallas' off-TPU is a hard error at every entry point — forced,
+    via env, and at ops.set_backend configuration time."""
+    from repro.kernels import ops, platform
+    assert not platform.is_tpu()
+    with pytest.raises(RuntimeError, match="requires a TPU"):
+        platform.resolve("pallas")
+    monkeypatch.setenv(platform.ENV_VAR, "pallas")
+    with pytest.raises(RuntimeError, match="requires a TPU"):
+        platform.resolve()
+    monkeypatch.delenv(platform.ENV_VAR)
+    with pytest.raises(RuntimeError, match="requires a TPU"):
+        ops.set_backend("pallas")
+    assert ops.FORCE is None                           # rejected, not stored
+
+
+def test_use_backend_scoping():
+    from repro.kernels import ops
+    assert ops.FORCE is None
+    with ops.use_backend("interpret"):
+        assert ops.backend() == "interpret"
+        with ops.use_backend("ref"):
+            assert ops.backend() == "xla"
+        assert ops.backend() == "interpret"
+    assert ops.FORCE is None
+
+
+def test_flash_ops_shares_platform_probe(monkeypatch):
+    """flash_ops and ops must answer 'interpret?' through the SAME probe:
+    env settings reach both, and a bad env fails loudly in both."""
+    from repro.kernels import flash_ops, platform
+    monkeypatch.delenv(platform.ENV_VAR, raising=False)
+    assert flash_ops._interpret() is True              # CPU: never compile
+    monkeypatch.setenv(platform.ENV_VAR, "pallas")
+    with pytest.raises(RuntimeError, match="requires a TPU"):
+        flash_ops._interpret()
+
+
+# ---------------------------------------------------------------------------
+# stochastic rounding through the dispatch seam
+# ---------------------------------------------------------------------------
+
+def test_stochastic_dispatch_determinism():
+    """cfg.stochastic routes every backend to the xla reference (the
+    kernels don't thread PRNG keys): fixed key -> identical payloads on
+    every backend; different key -> different rounding."""
+    from repro.kernels import ops
+    cfg = QuantConfig(bits=4, block_size=128, stochastic=True)
+    x = _rand((4, 512), jnp.float32, seed=21)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    outs = {}
+    for be in ("xla", "interpret"):
+        with ops.use_backend(be):
+            outs[be] = ops.quantize_blockwise(x, cfg, k1)
+    np.testing.assert_array_equal(np.asarray(outs["xla"][0]),
+                                  np.asarray(outs["interpret"][0]))
+    np.testing.assert_array_equal(np.asarray(outs["xla"][1]),
+                                  np.asarray(outs["interpret"][1]))
+    with ops.use_backend("interpret"):
+        again = ops.quantize_blockwise(x, cfg, k1)
+        other = ops.quantize_blockwise(x, cfg, k2)
+    np.testing.assert_array_equal(np.asarray(outs["interpret"][0]),
+                                  np.asarray(again[0]))
+    assert not np.array_equal(np.asarray(again[0]), np.asarray(other[0]))
+
+
+# ---------------------------------------------------------------------------
+# multi-segment shapes + tile-boundary-crossing blocks
+# ---------------------------------------------------------------------------
+
+def test_multiseg_ref_parity(monkeypatch):
+    """Force the reference onto its lax.map segmentation path and check
+    the (unsegmented, tile-streaming) kernel still matches bit-for-bit —
+    segmentation is a memory layout choice, never a numerics one."""
+    from repro.core import quant as quant_mod
+    monkeypatch.setattr(quant_mod, "_SEG_ELEMS", 1 << 10)
+    cfg = QuantConfig(bits=8, block_size=128)
+    x = _rand((4, 2048), jnp.float32, seed=13)         # 8192 elems > 1024
+    p_r, s_r = _jit(ref.quantize_ref, cfg=cfg)(x)
+    p_k, s_k = _jit(quantize_pallas, cfg=cfg, **INTERP)(x)
+    np.testing.assert_array_equal(np.asarray(p_k), np.asarray(p_r))
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r), rtol=1e-6)
+
+
+@pytest.mark.parametrize("rows,cols,block,bits", [
+    (2, 16384, 8192, 8),    # block > the 4096-col VMEM tile cap
+    (5, 8192, 4096, 4),     # block == cap, odd rows, int4 packing
+])
+def test_block_crossing_tile_cap(rows, cols, block, bits):
+    cfg = QuantConfig(bits=bits, block_size=block)
+    x = _rand((rows, cols), jnp.float32, seed=rows)
+    p_k, s_k = _jit(quantize_pallas, cfg=cfg, **INTERP)(x)
+    p_r, s_r = _jit(ref.quantize_ref, cfg=cfg)(x)
+    np.testing.assert_array_equal(np.asarray(p_k), np.asarray(p_r))
+    got = _jit(dequantize_pallas, cfg=cfg, out_dtype=jnp.bfloat16, **INTERP)(p_k, s_k)
+    want = _jit(ref.dequantize_ref, cfg=cfg, out_dtype=jnp.bfloat16)(p_r, s_r)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# schedule/serve composition with the kernel backend on (8-dev subprocess)
+# ---------------------------------------------------------------------------
+
+from repro.testing.subproc import run_checks
+
+_INTERP_ENV = {"REPRO_KERNEL_BACKEND": "interpret"}
+
+
+def test_depth_sweep_kernel_backend_8dev():
+    """The dense depth sweep stays bit-exact with the kernel backend
+    forced to interpret (same assertions as check_prefetch_depth_sweep;
+    `make kernel-smoke` additionally runs that check unchanged under
+    $REPRO_KERNEL_BACKEND=interpret)."""
+    run_checks(["check_kernel_backend_depth_sweep"], n_devices=8,
+               timeout=2400)
+
+
+def test_serve_engine_kernel_backend_8dev():
+    """Acceptance: the serve-engine bit-identity check passes unchanged
+    with the kernel backend forced to interpret (fused INT8 head active)."""
+    run_checks(["check_serve_engine_continuous_batching"], n_devices=8,
+               timeout=1800, extra_env=_INTERP_ENV)
+
+
+def test_train_bitexact_across_backends_8dev():
+    run_checks(["check_kernel_backend_train_bitexact"], n_devices=8,
+               timeout=1800)
+
+
+def test_qwz_gemm_head_matches_staged_8dev():
+    run_checks(["check_qwz_gemm_head_matches_staged"], n_devices=8,
+               timeout=1800)
+
+
+def test_kernels_first_import_order():
+    """Regression: importing repro.kernels.ops BEFORE repro.core (the
+    --kernel-backend CLI path does exactly this) must not trip the
+    kernels<->core import cycle.  core.collectives binds the ops module,
+    not its names, so resolution happens at call time."""
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    for first in ("repro.kernels.ops", "repro.kernels.ref"):
+        r = subprocess.run(
+            [sys.executable, "-c",
+             f"import {first}; import repro.core.collectives as c; "
+             "import repro.kernels.ops as o; "
+             "assert callable(c.quantize_blockwise); print(o.backend())"],
+            env=env, capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+        assert r.returncode == 0, f"{first} first: {r.stderr}"
