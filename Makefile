@@ -9,7 +9,7 @@ MP8       = XLA_FLAGS=--xla_force_host_platform_device_count=8
 PYPATH    = PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH}
 
 .PHONY: test test-fast bench-smoke bench ckpt-smoke serve-smoke moe-smoke \
-        ring-smoke fault-smoke kernel-smoke
+        ring-smoke fault-smoke kernel-smoke obs-smoke
 
 # tier-1 verify (ROADMAP.md): full suite, stop on first failure
 test:
@@ -105,6 +105,25 @@ kernel-smoke:
 	print('kernel smoke OK: interpret-mode parity + kernel-backed '\
 	      'schedule/serve bit-exactness verified')"
 	$(PYPATH) $(PY) -m benchmarks.kernel_bench --smoke
+
+# observability smoke (obs/, DESIGN.md §8): measured-vs-projected comm
+# crosscheck per collective label (dense + MoE, ring depths 0/1/2),
+# telemetry-under-failure jsonl replay (kill/restart -> totals equal the
+# uninterrupted oracle), and the runtime gate on a REAL 8-dev train run
+# (comm bytes within 1% of the analytic projection, telemetry-disabled
+# overhead < 2%), then the telemetry-on train + serve BENCH report with
+# the gate in assert mode
+obs-smoke:
+	$(PYPATH) $(PY) -c "\
+	from repro.testing.subproc import run_checks; \
+	run_checks(['check_obs_comm_crosscheck'], n_devices=8, timeout=1800); \
+	run_checks(['check_obs_comm_crosscheck_moe'], n_devices=8, \
+	           timeout=1800); \
+	run_checks(['check_obs_telemetry_failure_replay', \
+	            'check_obs_runtime_gate'], n_devices=8, timeout=1800); \
+	print('obs smoke OK: comm counters match analytics, replay survives '\
+	      'kill/restart, runtime gate passes')"
+	$(PYPATH) $(PY) -m benchmarks.runtime_report
 
 # overlap benchmark + suite smoke in one command: verifies the prefetched
 # schedule from compiled HLO on the 8-device CPU mesh, then prints the

@@ -51,11 +51,16 @@ for variant in ("baseline", "zeropp", "qwz", "hpz", "qgz"):
     batch = dr._abstract(dr.train_batch_shapes(model, shape), mesh,
                          ts.in_specs[2])
     res = dr._jaxpr_info(ts.fn, (params, opt, batch), mesh)
+    from repro.core.zeropp import step_wire_by_label
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     out[variant] = {
         "n_params": model.n_params(),
         "wire": res["collectives"]["per_tier_wire"],
         "per_op": {k: v["wire_bytes"]
                    for k, v in res["collectives"]["per_op"].items()},
+        "wire_by_label": res["collectives"]["wire_by_label"],
+        "projected_by_label": step_wire_by_label(
+            model.comm_events(), model.zcfg, sizes),
     }
 print("RESULT " + json.dumps(out))
 """
@@ -112,6 +117,29 @@ def main(csv=True):
             base_slow = slow
         print(f"{variant},{slow:.0f},{fast:.0f},"
               f"{base_slow / max(slow, 1):.2f}x")
+
+    # measured (jaxpr named-scope buckets) vs projected (the analytic
+    # event model behind the runtime gate, obs/report.py) per collective
+    # label — both sides count the same traced program, so they must
+    # agree to 1% (in practice: to the byte) or one model is wrong
+    print("# measured vs projected per-device wire bytes by label")
+    print("variant,label,measured,projected,rel")
+    worst = 0.0
+    for variant in ("baseline", "zeropp", "qwz", "hpz", "qgz"):
+        mb = m[variant]["wire_by_label"]
+        pb = m[variant]["projected_by_label"]
+        for lbl in sorted(set(mb) | set(pb)):
+            if lbl == "other":
+                continue
+            mv, pv = mb.get(lbl, 0.0), pb.get(lbl, 0.0)
+            rel = abs(mv - pv) / max(mv, pv, 1.0)
+            worst = max(worst, rel)
+            print(f"{variant},{lbl},{mv:.0f},{pv:.0f},{rel:.4f}")
+    if worst > 0.01:
+        raise AssertionError(
+            f"measured vs projected comm bytes disagree (worst rel "
+            f"{worst:.4f} > 0.01) — see table above")
+    print(f"# measured==projected within 1% (worst rel {worst:.6f})")
     return m
 
 

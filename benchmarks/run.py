@@ -8,7 +8,13 @@
   overlap_bench    — measured schedule overlap vs ring depth (BENCH json:
                      structural + depth-credited fractions, async pairs,
                      break-even depth projection; 8-dev subprocess)
+  runtime_report   — telemetry-on train + serve run (obs/): BENCH snapshot
+                     with the measured-vs-projected comm gate in assert
+                     mode, serve latency percentiles, dispatch counts
   roofline         — §Roofline table from the dry-run JSONs (if present)
+
+Any section that raises marks the whole run failed (nonzero exit) — no
+silently swallowed crashes.
 
 Run everything: PYTHONPATH=src python -m benchmarks.run
 Select sections: PYTHONPATH=src python -m benchmarks.run comm_volume ...
@@ -23,7 +29,7 @@ import traceback
 def main() -> None:
     from benchmarks import (comm_volume, convergence, kernel_bench,
                             memory_model, overlap_bench, roofline,
-                            throughput_model)
+                            runtime_report, throughput_model)
     sections = {
         "comm_volume": comm_volume.main,
         "throughput_model": throughput_model.main,
@@ -31,6 +37,7 @@ def main() -> None:
         "memory_model": memory_model.main,
         "convergence": convergence.main,
         "overlap_bench": overlap_bench.main,
+        "runtime_report": runtime_report.main,
     }
     pick = [a for a in sys.argv[1:] if a in sections] or list(sections)
     failures = []
@@ -47,10 +54,12 @@ def main() -> None:
     if not sys.argv[1:] or "roofline" in sys.argv[1:]:
         print("\n===== roofline =====")
         try:
-            from benchmarks import roofline as rl
-            rows = rl.load()
-            print(rl.render(rows))
+            rows = roofline.load()
+            print(roofline.render(rows))
         except Exception:
+            # a crashed section must fail the run, not scroll past — this
+            # used to print the traceback and exit 0
+            failures.append("roofline")
             traceback.print_exc()
 
     if failures:

@@ -114,6 +114,20 @@ def main():
         print(f"req {uid}: prompt={prompt.tolist()} "
               f"generated={results[uid]}")
 
+    st = engine.stats()
+
+    def _ms(d):
+        return (f"p50 {d['p50']:.1f}ms / p99 {d['p99']:.1f}ms"
+                if d.get("p50") is not None else "n/a")
+
+    tps = st["tok_per_s"]
+    print(f"\n[serve] stats: admitted={st['admitted']} "
+          f"completed={st['completed']} expired={st['expired']} "
+          f"steps={st['steps']} occupancy={st['occupancy']:.2f}")
+    print(f"[serve] TTFT {_ms(st['ttft_ms'])}  "
+          f"per-token {_ms(st['tok_latency_ms'])}  "
+          f"throughput {'n/a' if tps is None else f'{tps:.1f} tok/s'}")
+
 
 if __name__ == "__main__":
     main()

@@ -37,6 +37,14 @@ from repro.core.compat import axis_size as _axis_size
 # Module import (not from-import): kernels.ops also reaches back into
 # repro.core lazily, so names must resolve at call time, not import time.
 from repro.kernels import ops as _kops
+# Telemetry labels: every collective wrapper below runs under a
+# ``zero.<op>`` named_scope.  The scope is trace-time only (zero runtime
+# cost) but survives into the jaxpr ``name_stack`` — through scan bodies
+# and custom_vjp transposition — so launch/jaxpr_analysis.py can attribute
+# wire bytes per collective and obs/report.py can gate measured-vs-
+# projected comm volume.  Keep these names in sync with
+# zeropp.WIRE_LABELS and DESIGN.md §8.
+from repro.obs.trace import annotate as _annotate
 
 dequant_reduce = lambda *a, **k: _kops.dequant_reduce(*a, **k)  # noqa: E731
 dequant_reduce_quant = lambda *a, **k: _kops.dequant_reduce_quant(*a, **k)  # noqa: E731
@@ -88,13 +96,16 @@ def gather_bf16(x: Array, axes: Axes, axis: int = 0) -> Array:
 
 def baseline_all_gather(shard: Array, axes: Axes, out_dtype=None) -> Array:
     """Full-precision all-gather of a flat parameter shard (ZeRO-3 fwd/bwd)."""
-    full = gather_bf16(shard, axes)
-    return full if out_dtype is None else full.astype(out_dtype)
+    with _annotate("zero.baseline_gather"):
+        full = gather_bf16(shard, axes)
+        return full if out_dtype is None else full.astype(out_dtype)
 
 
 def baseline_reduce_scatter(grad: Array, axes: Axes) -> Array:
     """Full-precision reduce-scatter of a flat local gradient (ZeRO-3)."""
-    return lax.psum_scatter(grad, _axes_tuple(axes), scatter_dimension=0, tiled=True)
+    with _annotate("zero.baseline_reduce"):
+        return lax.psum_scatter(grad, _axes_tuple(axes), scatter_dimension=0,
+                                tiled=True)
 
 
 # ---------------------------------------------------------------------------
@@ -119,22 +130,24 @@ def qwz_all_gather(
     Fig. 14 "non-blocked" ablation that destroys convergence.
     """
     n = shard.shape[0]
-    if blocked:
-        if n % cfg.block_size:
-            raise ValueError(f"shard len {n} % block {cfg.block_size} != 0")
-        payload, scales = quantize_blockwise(shard, cfg)
+    with _annotate("zero.qwz_gather"):
+        if blocked:
+            if n % cfg.block_size:
+                raise ValueError(
+                    f"shard len {n} % block {cfg.block_size} != 0")
+            payload, scales = quantize_blockwise(shard, cfg)
+            payload_g = lax.all_gather(payload, _axes_tuple(axes), tiled=True)
+            scales_g = lax.all_gather(scales, _axes_tuple(axes), tiled=True)
+            return dequantize_blockwise(payload_g, scales_g, cfg, out_dtype)
+        payload, scale = quantize_global(shard, cfg.bits)
         payload_g = lax.all_gather(payload, _axes_tuple(axes), tiled=True)
-        scales_g = lax.all_gather(scales, _axes_tuple(axes), tiled=True)
-        return dequantize_blockwise(payload_g, scales_g, cfg, out_dtype)
-    payload, scale = quantize_global(shard, cfg.bits)
-    payload_g = lax.all_gather(payload, _axes_tuple(axes), tiled=True)
-    scale_g = lax.all_gather(scale[None], _axes_tuple(axes))  # (world,)
-    world = axis_size(axes)
-    per = payload_g.shape[0] // world
-    vals = dequantize_global(
-        payload_g.reshape(world, per), scale_g.reshape(world, 1), cfg.bits, out_dtype
-    )
-    return vals.reshape(-1)
+        scale_g = lax.all_gather(scale[None], _axes_tuple(axes))  # (world,)
+        world = axis_size(axes)
+        per = payload_g.shape[0] // world
+        vals = dequantize_global(
+            payload_g.reshape(world, per), scale_g.reshape(world, 1),
+            cfg.bits, out_dtype)
+        return vals.reshape(-1)
 
 
 def qwz_all_gather_quant(
@@ -152,10 +165,11 @@ def qwz_all_gather_quant(
     n = shard.shape[0]
     if n % cfg.block_size:
         raise ValueError(f"shard len {n} % block {cfg.block_size} != 0")
-    payload, scales = quantize_blockwise(shard, cfg)
-    payload_g = lax.all_gather(payload, _axes_tuple(axes), tiled=True)
-    scales_g = lax.all_gather(scales, _axes_tuple(axes), tiled=True)
-    return payload_g, scales_g
+    with _annotate("zero.qwz_gather"):
+        payload, scales = quantize_blockwise(shard, cfg)
+        payload_g = lax.all_gather(payload, _axes_tuple(axes), tiled=True)
+        scales_g = lax.all_gather(scales, _axes_tuple(axes), tiled=True)
+        return payload_g, scales_g
 
 
 # ---------------------------------------------------------------------------
@@ -181,8 +195,9 @@ def hpz_all_gather(secondary_shard: Array, intra_axes: Axes,
     (e.g. ``('data','model')`` = a whole pod) — the paper's "extended to
     support multiple compute nodes" secondary group.
     """
-    full = gather_bf16(_pin(secondary_shard), intra_axes)
-    return full if out_dtype is None else full.astype(out_dtype)
+    with _annotate("zero.hpz_gather"):
+        full = gather_bf16(_pin(secondary_shard), intra_axes)
+        return full if out_dtype is None else full.astype(out_dtype)
 
 
 def slice_secondary(full: Array, intra_axes: Axes) -> Array:
@@ -259,38 +274,41 @@ def qgz_reduce_scatter(
     if key is not None:
         k1, k2 = jax.random.split(key)
 
-    # -- step 1: slice + reorder (Eq. 1 -> Eq. 2), fused with quantization --
-    # (X, Y, L): grouped by destination intra coordinate.  On TPU the
-    # transpose rides inside the quant kernel's BlockSpec index_map (§4.2
-    # "fused quantization and remapping kernel").
-    slices = grad.reshape(Y, X, L)
-    payload, scales = quantize_reordered(slices, cfg, k1)
+    with _annotate("zero.qgz_reduce"):
+        # -- step 1: slice + reorder (Eq. 1 -> Eq. 2), fused with quant ----
+        # (X, Y, L): grouped by destination intra coordinate.  On TPU the
+        # transpose rides inside the quant kernel's BlockSpec index_map
+        # (§4.2 "fused quantization and remapping kernel").
+        slices = grad.reshape(Y, X, L)
+        payload, scales = quantize_reordered(slices, cfg, k1)
 
-    # -- step 2: intra-node hop over the fast axis --------------------------
-    payload = lax.all_to_all(payload, intra_axis, split_axis=0, concat_axis=0)
-    scales = lax.all_to_all(scales, intra_axis, split_axis=0, concat_axis=0)
-    # payload[x'] is peer x''s contribution to my (Y, L) slice group
+        # -- step 2: intra-node hop over the fast axis ---------------------
+        payload = lax.all_to_all(payload, intra_axis, split_axis=0,
+                                 concat_axis=0)
+        scales = lax.all_to_all(scales, intra_axis, split_axis=0,
+                                concat_axis=0)
+        # payload[x'] is peer x''s contribution to my (Y, L) slice group
 
-    if not inter_axes:  # single-tier world: we already hold the final slice
+        if not inter_axes:  # single-tier world: already the final slice
+            X_ = payload.shape[0]
+            out = dequant_reduce(payload.reshape(X_, -1),
+                                 scales.reshape(X_, -1), cfg)
+            return out.reshape(Y, L)[0].astype(out_dtype)
+
+        # fused dequant -> fp32 reduce -> requant (one kernel; §4.2 fusion)
         X_ = payload.shape[0]
-        out = dequant_reduce(payload.reshape(X_, -1), scales.reshape(X_, -1),
-                             cfg)
-        return out.reshape(Y, L)[0].astype(out_dtype)
+        payload2, scales2 = dequant_reduce_quant(
+            payload.reshape(X_, -1), scales.reshape(X_, -1), cfg, cfg, k2)
+        payload2 = payload2.reshape(Y, -1)                      # (Y, Lp)
+        scales2 = scales2.reshape(Y, -1)
 
-    # fused dequant -> fp32 reduce -> requant (one kernel; §4.2 "9x" fusion)
-    X_ = payload.shape[0]
-    payload2, scales2 = dequant_reduce_quant(
-        payload.reshape(X_, -1), scales.reshape(X_, -1), cfg, cfg, k2)
-    payload2 = payload2.reshape(Y, -1)                        # (Y, Lp)
-    scales2 = scales2.reshape(Y, -1)
-
-    # -- step 3: inter-node hop over the slow axes --------------------------
-    payload2 = lax.all_to_all(payload2[:, None], inter_axes,
-                              split_axis=0, concat_axis=1)    # (1, Y, Lp)
-    scales2 = lax.all_to_all(scales2[:, None], inter_axes,
-                             split_axis=0, concat_axis=1)
-    out = dequant_reduce(payload2[0], scales2[0], cfg)         # (L,) fp32
-    return out.astype(out_dtype)
+        # -- step 3: inter-node hop over the slow axes ---------------------
+        payload2 = lax.all_to_all(payload2[:, None], inter_axes,
+                                  split_axis=0, concat_axis=1)  # (1, Y, Lp)
+        scales2 = lax.all_to_all(scales2[:, None], inter_axes,
+                                 split_axis=0, concat_axis=1)
+        out = dequant_reduce(payload2[0], scales2[0], cfg)      # (L,) fp32
+        return out.astype(out_dtype)
 
 
 def qgz_reduce_scatter_1hop(
@@ -312,12 +330,15 @@ def qgz_reduce_scatter_1hop(
             f"grad len {n} must be a multiple of world*block "
             f"({world}*{cfg.block_size})")
     L = n // world
-    slices = grad.reshape(world, L)
-    payload, scales = _quantize_slices(slices, cfg, key)
-    payload = lax.all_to_all(payload, _axes_tuple(axes), split_axis=0, concat_axis=0)
-    scales = lax.all_to_all(scales, _axes_tuple(axes), split_axis=0, concat_axis=0)
-    deq = dequantize_blockwise(payload, scales, cfg)
-    return jnp.sum(deq, axis=0).astype(out_dtype)
+    with _annotate("zero.qgz_reduce1hop"):
+        slices = grad.reshape(world, L)
+        payload, scales = _quantize_slices(slices, cfg, key)
+        payload = lax.all_to_all(payload, _axes_tuple(axes), split_axis=0,
+                                 concat_axis=0)
+        scales = lax.all_to_all(scales, _axes_tuple(axes), split_axis=0,
+                                concat_axis=0)
+        deq = dequantize_blockwise(payload, scales, cfg)
+        return jnp.sum(deq, axis=0).astype(out_dtype)
 
 
 def qgz_quantized_ring_reduce_scatter(
@@ -357,5 +378,6 @@ def qgz_quantized_ring_reduce_scatter(
     idx0 = jnp.mod(rank - 1, world)
     acc0 = lax.dynamic_slice_in_dim(grad, idx0 * L, L).astype(jnp.float32)
     # after world-1 hops each device holds the fully-reduced slice `rank`
-    acc = lax.fori_loop(0, world - 1, hop, acc0)
+    with _annotate("zero.qgz_ring"):
+        acc = lax.fori_loop(0, world - 1, hop, acc0)
     return acc.astype(out_dtype)

@@ -78,8 +78,15 @@ class QuantConfig:
         matches the bytes actually moved."""
         return n if self.bits == 8 else (n + 1) // 2
 
-    def wire_bytes(self, n: int, scale_bytes: int = 2) -> int:
-        """Payload + scales actually moved on the wire for n elements."""
+    def wire_bytes(self, n: int, scale_bytes: int = 4) -> int:
+        """Payload + scales actually moved on the wire for n elements.
+
+        Scales are float32 — 4 bytes each — end to end: quantize_blockwise
+        emits fp32 scales and the qwZ/qgZ collectives gather/all-to-all
+        them as-is, on separate collectives from the payload.  (This
+        default was 2 for a long time, silently under-counting every
+        analytic comm-volume number by 2 bytes per block; the runtime
+        jaxpr-measured counters caught it.)"""
         nblocks = -(-n // self.block_size)
         return self.payload_bytes(n) + nblocks * scale_bytes
 

@@ -307,3 +307,99 @@ def comm_volume_per_step(n_params: int, z: ZeroConfig,
     return {"fwd_allgather": fwd, "bwd_allgather": bwd, "grad_reduce": rs,
             "total": fwd + bwd + rs, "baseline_total": 3 * M,
             "reduction_factor": 3 * M / max(fwd + bwd + rs, 1)}
+
+
+# ---------------------------------------------------------------------------
+# per-device wire accounting (runtime telemetry cross-check)
+# ---------------------------------------------------------------------------
+# Unlike comm_volume_per_step (Table-1 totals: M-relative, slow-tier-only),
+# these formulas give the PER-DEVICE bytes one collective invocation puts
+# on the wire, exactly as launch/jaxpr_analysis.py measures them from the
+# jaxpr (all_gather: out-in; scatter: in-out; all_to_all: in·(g-1)/g),
+# with fp32 scales riding their own collectives (quant.wire_bytes).
+# The labels match the named_scope names in core/collectives.py; the
+# measured-vs-projected gate (obs/report.py) compares per-label sums.
+
+WIRE_LABELS = ("zero.qwz_gather", "zero.baseline_gather", "zero.hpz_gather",
+               "zero.qgz_reduce", "zero.qgz_reduce1hop",
+               "zero.baseline_reduce")
+
+EVENT_KINDS = ("fwd_gather", "bwd_gather", "grad_reduce")
+
+
+def _group(sizes: dict, axes) -> int:
+    g = 1
+    for a in (axes if isinstance(axes, (tuple, list)) else (axes,)):
+        g *= int(sizes[a])
+    return g
+
+
+def wire_label(kind: str, z: ZeroConfig) -> str:
+    """The named_scope label the collective for ``kind`` runs under."""
+    if kind == "fwd_gather":
+        return "zero.qwz_gather" if z.qwz else "zero.baseline_gather"
+    if kind == "bwd_gather":
+        return "zero.hpz_gather" if z.hpz else wire_label("fwd_gather", z)
+    if kind == "grad_reduce":
+        if z.qgz:
+            return "zero.qgz_reduce" if z.qgz_2hop else "zero.qgz_reduce1hop"
+        return "zero.baseline_reduce"
+    raise ValueError(f"unknown comm event kind {kind!r}")
+
+
+def event_wire_bytes(kind: str, n_elems: int, z: ZeroConfig,
+                     sizes: dict) -> float:
+    """Per-device wire bytes for ONE collective over a global flat buffer of
+    ``n_elems`` elements.  ``sizes`` maps mesh axis name -> size."""
+    if not z.distributed:
+        return 0.0
+    n = int(n_elems)
+    if kind == "fwd_gather":
+        w = _group(sizes, z.dp_axes)
+        if z.qwz:
+            pb = z.qwz_cfg.payload_bytes
+            wire = float(pb(n) - pb(n // w))
+            if z.qwz_blocked:
+                b = z.qwz_block
+                wire += 4.0 * (n // b - (n // w) // b)
+            else:
+                wire += 4.0 * (w - 1)  # one fp32 scale per shard
+            return wire
+        eb = jnp.dtype(z.param_dtype).itemsize
+        return float(eb * n - eb * (n // w))
+    if kind == "bwd_gather":
+        if z.hpz:
+            xs = _group(sizes, z.secondary_axes)
+            eb = jnp.dtype(z.compute_dtype).itemsize
+            return float(eb * n - eb * (n // xs))
+        return event_wire_bytes("fwd_gather", n, z, sizes)
+    if kind == "grad_reduce":
+        if z.qgz:
+            pb = z.qgz_cfg.payload_bytes
+            b = z.qgz_block
+            if z.qgz_2hop:
+                X = _group(sizes, (z.intra_axis,))
+                Y = _group(sizes, z.inter_axes) if z.inter_axes else 1
+                wire = (pb(n) + 4.0 * (n // b)) * (X - 1) / X
+                if Y > 1:
+                    m = n // X
+                    wire += (pb(m) + 4.0 * (m // b)) * (Y - 1) / Y
+                return float(wire)
+            w = _group(sizes, z.dp_axes)
+            return float((pb(n) + 4.0 * (n // b)) * (w - 1) / w)
+        w = _group(sizes, z.dp_axes)
+        eb = jnp.dtype(z.reduce_dtype).itemsize
+        return float(eb * n - eb * (n // w))
+    raise ValueError(f"unknown comm event kind {kind!r}")
+
+
+def step_wire_by_label(events, z: ZeroConfig, sizes: dict) -> dict:
+    """Fold a comm-event list (``Model.comm_events()``) into per-label
+    per-device wire bytes — the projection the runtime gate checks the
+    jaxpr-measured counters against."""
+    out: dict = {}
+    for ev in events:
+        lbl = wire_label(ev["kind"], z)
+        wire = event_wire_bytes(ev["kind"], ev["elems"], z, sizes)
+        out[lbl] = out.get(lbl, 0.0) + wire * ev.get("count", 1)
+    return out

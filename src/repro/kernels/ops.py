@@ -37,6 +37,11 @@ from repro.kernels import platform
 from repro.kernels import ref as _ref
 from repro.kernels import quant_block as _qb
 from repro.kernels import fused_dequant_reduce_quant as _fq
+# stdlib-only metrics (obs.metrics imports neither jax nor repro): safe at
+# the bottom of the import graph.  Counts routing DECISIONS — inside jit
+# the wrapper body runs once per trace, so these are dispatch counts, not
+# per-step execution counts (exactly what backend-selection debugging needs).
+from repro.obs.metrics import count_dispatch as _count_dispatch
 
 Array = jax.Array
 
@@ -86,7 +91,9 @@ def quantize_blockwise(x: Array, cfg: QuantConfig,
     mode = backend()
     if mode == "xla" or cfg.stochastic or key is not None:
         from repro.core.quant import quantize_blockwise as q
+        _count_dispatch("quantize_blockwise", "xla")
         return q(x, cfg, key)
+    _count_dispatch("quantize_blockwise", mode)
     x2, lead = _as2d(x)
     p, s = _qb.quantize_pallas(x2, cfg, interpret=(mode == "interpret"))
     return p.reshape(*lead, p.shape[-1]), s.reshape(*lead, s.shape[-1])
@@ -97,6 +104,7 @@ def dequantize_blockwise(payload: Array, scales: Array, cfg: QuantConfig,
     """Inverse of :func:`quantize_blockwise`; writes ``out_dtype`` (the qwZ
     gather passes bf16) directly — no fp32 materialization of the output."""
     mode = backend()
+    _count_dispatch("dequantize_blockwise", mode)
     if mode == "xla":
         from repro.core.quant import dequantize_blockwise as d
         return d(payload, scales, cfg, out_dtype)
@@ -115,7 +123,9 @@ def quantize_reordered(x: Array, cfg: QuantConfig,
     if mode == "xla" or cfg.stochastic or key is not None:
         xt = jnp.swapaxes(x, 0, 1)
         from repro.core.quant import quantize_blockwise as q
+        _count_dispatch("quantize_reordered", "xla")
         return q(xt, cfg, key)
+    _count_dispatch("quantize_reordered", mode)
     return _qb.quantize_reordered_pallas(x, cfg,
                                          interpret=(mode == "interpret"))
 
@@ -124,6 +134,7 @@ def dequant_reduce(payload: Array, scales: Array, cfg: QuantConfig,
                    out_dtype=jnp.float32) -> Array:
     """Sum N quantized contributions in fp32: (N, P), (N, NB) -> (C,)."""
     mode = backend()
+    _count_dispatch("dequant_reduce", mode)
     if mode == "xla":
         return _ref.dequant_reduce_ref(payload, scales, cfg, out_dtype)
     return _fq.dequant_reduce_pallas(payload, scales, cfg, out_dtype,
@@ -138,7 +149,9 @@ def dequant_reduce_quant(payload: Array, scales: Array, cfg_in: QuantConfig,
     if mode == "xla" or cfg_out.stochastic or key is not None:
         acc = _ref.dequant_reduce_ref(payload, scales, cfg_in, jnp.float32)
         from repro.core.quant import quantize_blockwise as q
+        _count_dispatch("dequant_reduce_quant", "xla")
         return q(acc, cfg_out, key)
+    _count_dispatch("dequant_reduce_quant", mode)
     return _fq.dequant_reduce_quant_pallas(payload, scales, cfg_in, cfg_out,
                                            interpret=(mode == "interpret"))
 
@@ -157,6 +170,7 @@ def dequant_matmul(x: Array, payload: Array, scales: Array,
     never materializing the bf16 weight matrix).
     """
     mode = backend()
+    _count_dispatch("dequant_matmul", mode)
     if mode == "xla":
         return _ref.dequant_matmul_ref(x, payload, scales,
                                        compute_dtype=compute_dtype,

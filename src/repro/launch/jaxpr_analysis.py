@@ -21,6 +21,7 @@ recursively.
 from __future__ import annotations
 
 import dataclasses
+import re
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -58,6 +59,24 @@ def _tier(axes: Tuple[str, ...]) -> str:
         if _TIER_RANK.get(a, 0) > _TIER_RANK[best]:
             best = a if a in _TIER_RANK else best
     return best
+
+
+# Telemetry attribution: core/collectives.py wraps each ZeRO collective in
+# a ``zero.<op>`` jax.named_scope; the label survives into the eqn's
+# name_stack (through scan bodies, and through custom_vjp transposition
+# where it appears wrapped, e.g. "transpose(jvp(zero.hpz_gather))").  Any
+# collective outside such a scope (loss psums, metric reductions) buckets
+# to "other".  The innermost (last) label wins if scopes ever nest.
+_LABEL_RE = re.compile(r"zero\.\w+")
+
+
+def _coll_label(eqn) -> str:
+    try:
+        stack = str(eqn.source_info.name_stack)
+    except Exception:
+        return "other"
+    hits = _LABEL_RE.findall(stack)
+    return hits[-1] if hits else "other"
 
 
 def _wire(prim: str, in_b: float, out_b: float, n: int) -> float:
@@ -106,6 +125,7 @@ class JTotals:
     coll_per_tier: Dict[str, float] = dataclasses.field(
         default_factory=lambda: {"model": 0.0, "data": 0.0, "pod": 0.0})
     coll_count: float = 0.0
+    wire_by_label: Dict[str, float] = dataclasses.field(default_factory=dict)
 
 
 def _dot_flops(eqn) -> float:
@@ -163,6 +183,8 @@ def _walk(jaxpr, mult: float, t: JTotals, mesh_shape: Dict[str, int],
                     k, {"count": 0.0, "operand_bytes": 0.0, "wire_bytes": 0.0})
                 for f in dd:
                     dd[f] += d[f]
+            for k, v in best.wire_by_label.items():
+                t.wire_by_label[k] = t.wire_by_label.get(k, 0.0) + v
             t.coll_count += best.coll_count
             continue
         if subs:
@@ -194,6 +216,8 @@ def _walk(jaxpr, mult: float, t: JTotals, mesh_shape: Dict[str, int],
             d["operand_bytes"] += in_b * mult
             d["wire_bytes"] += wire * mult
             t.coll_per_tier[tier] += wire * mult
+            lbl = _coll_label(eqn)
+            t.wire_by_label[lbl] = t.wire_by_label.get(lbl, 0.0) + wire * mult
             t.coll_count += mult
             t.hbm_bytes += (in_b + out_b) * mult
             continue
@@ -296,6 +320,7 @@ def analyze_jaxpr(closed_jaxpr, mesh_shape: Dict[str, int]) -> Dict[str, Any]:
         "collectives": {
             "per_op": t.coll_per_op,
             "per_tier_wire": t.coll_per_tier,
+            "wire_by_label": t.wire_by_label,
             "count": t.coll_count,
             "operand_bytes": sum(d["operand_bytes"]
                                  for d in t.coll_per_op.values()),

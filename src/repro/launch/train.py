@@ -80,9 +80,32 @@ def restore_ckpt(ckpt_dir: str, model, mesh, opt_cfg):
     return st.step, st.params, st.opt, st.meta
 
 
+def _setup_telemetry(args):
+    """Install the jsonl tracer when ``--metrics-dir`` is given; otherwise
+    leave the disabled singleton in place (no-op spans, zero overhead)."""
+    from repro.obs.trace import Tracer, get_tracer, set_tracer
+    if getattr(args, "metrics_dir", None):
+        tracer = Tracer(os.path.join(args.metrics_dir, "events.jsonl"))
+        set_tracer(tracer)
+        return tracer
+    return get_tracer()
+
+
+def _comm_per_step(ts, mesh, params, opt, batch) -> Dict[str, float]:
+    """One-time jaxpr walk of the train step: per-device wire bytes by
+    collective label.  Traced once (abstract eval — no execution), then
+    folded into host counters every step."""
+    import jax
+    from repro.launch.jaxpr_analysis import analyze_jaxpr
+    cj = jax.make_jaxpr(ts.fn)(params, opt, batch)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return analyze_jaxpr(cj, sizes)["collectives"]["wire_by_label"]
+
+
 def train_loop(args) -> Dict[str, Any]:
     import jax
     from repro.data.synthetic import make_batch
+    from repro.obs.metrics import get_registry
     from repro.train.state import ZeroState
     from repro.train.trainer import place_batch
 
@@ -107,6 +130,11 @@ def train_loop(args) -> Dict[str, Any]:
     b_specs = ts.in_specs[2]
     losses = []
     t_start = time.time()
+    telemetry = bool(getattr(args, "metrics_dir", None))
+    tracer = _setup_telemetry(args)
+    trace_steps = int(getattr(args, "trace_steps", 0) or 0)
+    reg = get_registry()
+    comm = None   # {label: per-device bytes/step}, filled on first step
     for i in range(start, args.steps):
         if args.simulate_failure_at is not None \
                 and i == args.simulate_failure_at:
@@ -116,9 +144,28 @@ def train_loop(args) -> Dict[str, Any]:
             host = {k: v.reshape((args.accum, -1) + v.shape[1:])
                     for k, v in host.items()}
         batch = place_batch(host, mesh, b_specs)
-        params, opt, metrics = ts.fn(params, opt, batch)
-        loss = float(metrics["loss"])
+        if telemetry and comm is None:
+            comm = _comm_per_step(ts, mesh, params, opt, batch)
+            for lbl, b in comm.items():
+                reg.gauge(f"comm.{lbl}.bytes_per_step").set(b)
+        # profiler annotations only for the first --trace-steps steps (the
+        # TraceAnnotation enter/exit is the one per-step cost worth gating)
+        tracer.profiler_annotations = (i - start) < trace_steps
+        t_step = time.monotonic_ns()
+        with tracer.span("train.step", step=i):
+            params, opt, metrics = ts.fn(params, opt, batch)
+            loss = float(metrics["loss"])
         losses.append(loss)
+        if telemetry:
+            wall_ms = (time.monotonic_ns() - t_step) / 1e6
+            reg.histogram("train.step.wall_ms").observe(wall_ms)
+            reg.counter("train.steps").inc()
+            reg.counter("train.tokens").inc(float(metrics["tokens"]))
+            for lbl, b in comm.items():
+                reg.counter(f"comm.{lbl}.bytes").inc(b)
+            tracer.counter("train.steps", 1, step=i)
+            tracer.counter("train.tokens", float(metrics["tokens"]), step=i)
+            tracer.flush()
         if args.log_every and (i % args.log_every == 0 or i == args.steps - 1):
             dt = time.time() - t_start
             toks = float(metrics["tokens"]) * (i - start + 1)
@@ -132,8 +179,30 @@ def train_loop(args) -> Dict[str, Any]:
                       {"world": ts.world, "arch": arch.name,
                        "data_cursor": i + 1},
                       fmt=args.ckpt_format)
+    gate_report = None
+    if telemetry:
+        from repro.obs.report import (export_snapshot,
+                                      projected_wire_by_label, runtime_gate)
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        projected = projected_wire_by_label(model, sizes, accum=args.accum)
+        gate_report = runtime_gate(
+            measured=comm or {}, projected=projected,
+            strict=bool(getattr(args, "obs_gate", False)))
+        export_snapshot(
+            os.path.join(args.metrics_dir, "BENCH_runtime.json"),
+            extra={"gate": gate_report,
+                   "config": {"arch": arch.name, "variant": args.variant,
+                              "mesh": list(mesh_shape),
+                              "steps": args.steps, "batch": args.batch,
+                              "seq": args.seq, "accum": args.accum}})
+        tracer.close()
+        ok = "PASS" if gate_report["ok"] else "FAIL"
+        print(f"[train] obs gate {ok}: comm labels "
+              f"{sorted((comm or {}))} vs analytic projection "
+              f"(BENCH -> {args.metrics_dir}/BENCH_runtime.json)")
     return {"losses": losses, "entropy_bound": lm.entropy_bound,
-            "final_loss": losses[-1] if losses else None}
+            "final_loss": losses[-1] if losses else None,
+            "gate": gate_report}
 
 
 def run_elastic(args) -> None:
@@ -177,7 +246,8 @@ def run_elastic(args) -> None:
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
         ckpt_format=args.ckpt_format, async_ckpt=not args.sync_ckpt,
         retries=args.ckpt_retries, backoff=args.ckpt_backoff,
-        grace=args.grace, max_restarts=args.max_restarts)
+        grace=args.grace, max_restarts=args.max_restarts,
+        metrics_dir=args.metrics_dir)
     sup = Supervisor(cfg, faults=faults, reshard_plan=reshard_plan,
                      io_hooks=io_hooks)
     sup.install_signal_handlers()
@@ -239,6 +309,18 @@ def main():
                     help="sleep this long inside every shard write")
     ap.add_argument("--fault-flaky-writes", type=int, default=None,
                     help="fail the first N shard writes with OSError")
+    # telemetry (obs/): jsonl event log, metrics registry, BENCH export
+    ap.add_argument("--metrics-dir", default=None,
+                    help="enable telemetry: write events.jsonl + "
+                         "BENCH_runtime.json here (default: disabled, "
+                         "zero-overhead no-op tracer)")
+    ap.add_argument("--trace-steps", type=int, default=0,
+                    help="wrap the first N steps in jax.profiler "
+                         "TraceAnnotations (requires --metrics-dir)")
+    ap.add_argument("--obs-gate", action="store_true",
+                    help="assert the measured-vs-projected comm gate "
+                         "(1%% per collective label) instead of only "
+                         "reporting it")
     ap.add_argument("--kernel-backend", default=None,
                     choices=["pallas", "interpret", "xla", "ref"],
                     help="quant-kernel backend (kernels/ops.py); default "

@@ -167,6 +167,97 @@ class Model:
             n += self.embed_spec.size
         return n
 
+    def comm_events(self, accum: int = 1) -> list:
+        """Enumerate every ZeRO engine collective one training step issues.
+
+        Returns ``[{"kind", "elems", "count", "site"}, ...]`` where kind is
+        fwd_gather / bwd_gather / grad_reduce, elems the GLOBAL flat buffer
+        length, and count how many times that collective runs per step.
+        ``zeropp.step_wire_by_label`` folds this into per-label wire bytes —
+        the analytic projection that the runtime jaxpr-measured counters
+        are gated against (obs/report.py), so the counting here mirrors
+        core/schedule.py exactly:
+
+          * a depth-k layer/chunk ring issues n + k gathers per phase
+            (k ring-seed + n body prefetches) and n + k reduces (the first
+            k are the ring's dummy zero-reduces — still real wire);
+          * a W0-seeded chunk ring (speculative chunk-0 buffer) skips one
+            seed gather;
+          * the synchronous path (effective prefetch 0) issues exactly n;
+          * with hpZ, backward re-gathers ride the fast tier, EXCEPT the
+            MoE prefetch-0 nested recompute, whose per-chunk zero_apply
+            re-runs the qwZ forward gather before its hpZ backward one.
+        """
+        z = self.zcfg
+        ev: list = []
+        if not z.distributed:
+            return ev
+
+        def add(kind, elems, count, site):
+            if count > 0:
+                ev.append({"kind": kind, "elems": int(elems),
+                           "count": float(count) * accum, "site": site})
+
+        # single zero_apply sites: 1 gather / 1 bwd gather / 1 reduce each
+        sites = []
+        if self.embed_spec:
+            sites.append(("embed", self.embed_spec.padded_size, 1))
+        if self.rem_spec:
+            sites.append(("rem", self.rem_spec.padded_size, 1))
+        sites.append(("head", self.head_spec.padded_size, 1))
+        sites.append(("unemb", self.unemb_spec.padded_size,
+                      self.unemb_chunks))
+        for site, e, c in sites:
+            add("fwd_gather", e, c, site)
+            add("bwd_gather", e, c, site)
+            add("grad_reduce", e, c, site)
+
+        n = self.n_periods
+        k = z.effective_prefetch(n)
+        P = self.period_spec.padded_size
+        add("fwd_gather", P, n + k, "blocks.fwd")
+        add("bwd_gather", P, n + k, "blocks.bwd")
+        add("grad_reduce", P, n + k, "blocks.reduce")
+
+        if not self.is_moe:
+            return ev
+
+        nc = self.cfg.expert_chunks
+        kc = z.effective_prefetch(nc)
+        E = self.expert_spec.padded_size
+        hpz_remat = z.hpz and z.distributed
+        spec_on = k >= 1 and kc >= 1  # routing-ahead chunk-0 ring active
+
+        if spec_on:
+            add("fwd_gather", E, n + k, "blocks.spec")
+        # chunk pipeline, forward: W0 seed skip when the spec ring feeds it
+        add("fwd_gather", E, n * (nc + kc - (1 if spec_on else 0)),
+            "experts.fwd")
+
+        if k >= 1:
+            if hpz_remat:
+                # nested hpZ recompute (zero_chunk_scan_hpz): its own fwd
+                # replay + its bwd ring, all on the fast tier
+                if spec_on:
+                    add("bwd_gather", E, n + k, "blocks.bwd_spec")
+                add("bwd_gather", E,
+                    n * (nc + kc - (1 if spec_on else 0)),
+                    "experts.bwd_recompute")
+                add("bwd_gather", E, n * (nc + kc), "experts.bwd")
+            else:
+                # recompute differentiates plain zero_chunk_scan: a fresh
+                # forward pass (qwZ tier) plus its backward ring
+                add("fwd_gather", E, n * (nc + kc), "experts.bwd_recompute")
+                add("bwd_gather", E, n * (nc + kc), "experts.bwd")
+            add("grad_reduce", E, n * (nc + kc), "experts.reduce")
+        else:
+            # prefetch-0: per-layer zero_apply recompute runs each chunk's
+            # own zero_apply — qwZ fwd re-gather THEN hpZ/bwd gather
+            add("fwd_gather", E, n * nc, "experts.bwd_recompute")
+            add("bwd_gather", E, n * nc, "experts.bwd")
+            add("grad_reduce", E, n * nc, "experts.reduce")
+        return ev
+
     def n_active_params(self) -> int:
         """Parameters touched per token (MoE: shared + top_k experts)."""
         cfg = self.cfg

@@ -1,0 +1,38 @@
+"""Runtime telemetry: tracing, metrics, and measured-vs-projected reporting.
+
+Three modules, layered so the import graph stays acyclic:
+
+  ``obs.metrics``  stdlib-only counters/gauges/histograms behind a process
+                   registry.  Safe to import from anywhere (kernels.ops,
+                   core.collectives) — it never imports jax or repro.
+  ``obs.trace``    span/event tracer: host-side jsonl event log with
+                   monotonic timestamps, optional
+                   ``jax.profiler.TraceAnnotation`` spans, and
+                   ``annotate()`` — the in-jit ``jax.named_scope`` labels
+                   that survive into jaxpr ``name_stack``s and let
+                   ``launch/jaxpr_analysis.py`` attribute wire bytes to
+                   specific ZeRO collectives.
+  ``obs.report``   BENCH-schema snapshot export, ``bench_diff``, and the
+                   measured-vs-projected gate (comm bytes vs the analytic
+                   model, overhead, overlap).
+
+Disabled overhead is ~zero: the null tracer hands out one shared
+``nullcontext``, counters live host-side only, and nothing here ever runs
+inside a jitted step — per-step comm bytes come from a one-time jaxpr walk
+of the compiled step, accumulated by host counters at tick boundaries.
+"""
+from repro.obs.metrics import (Counter, Gauge, Histogram, Registry,
+                               get_registry, set_registry)
+from repro.obs.trace import (Tracer, annotate, get_tracer, set_tracer,
+                             replay_counters)
+from repro.obs.report import (GateFailure, bench_diff, comm_gate,
+                              export_snapshot, overhead_gate,
+                              projected_wire_by_label, runtime_gate)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "Registry",
+    "get_registry", "set_registry",
+    "Tracer", "annotate", "get_tracer", "set_tracer", "replay_counters",
+    "GateFailure", "bench_diff", "comm_gate", "export_snapshot",
+    "overhead_gate", "projected_wire_by_label", "runtime_gate",
+]

@@ -1,0 +1,184 @@
+"""Process-wide metrics registry: counters, gauges, histograms.
+
+Deliberately stdlib-only (no jax, no repro imports) so every layer of the
+stack — including ``kernels/ops.py``, which sits below ``core`` — can
+increment metrics without import cycles.  All instruments are host-side
+Python objects; nothing here is traced or jitted, so the cost of an
+increment is one dict lookup plus an int add, and the cost when a caller
+holds no registry is whatever guard the caller writes (typically an
+``if`` on a module global).
+
+Naming scheme (DESIGN.md §8): dot-separated, ``<subsystem>.<noun>[.<qual>]``:
+
+  train.step.wall_ms        histogram   per-step wall time
+  train.steps / train.tokens  counter   monotone progress
+  comm.<label>.bytes        counter     cumulative wire bytes per collective
+                                        label (zero.qwz_gather, ...)
+  comm.<label>.bytes_per_step  gauge    the per-step constant (jaxpr walk)
+  kernels.dispatch.<op>.<backend>  counter  dispatch-seam routing counts
+  serve.admitted/completed/expired counter  request lifecycle (exactly-once)
+  serve.ttft_ms / serve.tok_latency_ms  histogram  sliding-window latency
+  serve.slot_occupancy / serve.queue_depth  gauge
+  elastic.ckpt.write_ms     histogram   async checkpoint wall time
+  elastic.restarts / elastic.reshards  counter
+  elastic.ckpt.overlap_fraction  gauge  steps_overlapped / submitted
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from typing import Dict, Optional, Union
+
+
+class Counter:
+    """Monotone counter.  ``inc`` accepts negative deltas only via reset()."""
+
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0
+
+    def inc(self, delta: Union[int, float] = 1) -> None:
+        self.value += delta
+
+    def reset(self) -> None:
+        self.value = 0
+
+
+class Gauge:
+    """Last-write-wins scalar."""
+
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value: Union[int, float, None] = None
+
+    def set(self, value: Union[int, float]) -> None:
+        self.value = value
+
+
+class Histogram:
+    """Sliding-window histogram: keeps the last ``window`` observations in a
+    deque plus lifetime count/sum, computes exact percentiles on demand.
+    The window bounds memory for long-running serve loops; at window=512
+    a p99 is still exact over the last 512 observations."""
+
+    __slots__ = ("name", "window", "samples", "count", "total",
+                 "min", "max")
+
+    def __init__(self, name: str, window: int = 512):
+        self.name = name
+        self.window = window
+        self.samples: deque = deque(maxlen=window)
+        self.count = 0
+        self.total = 0.0
+        self.min: Optional[float] = None
+        self.max: Optional[float] = None
+
+    def observe(self, value: Union[int, float]) -> None:
+        v = float(value)
+        self.samples.append(v)
+        self.count += 1
+        self.total += v
+        self.min = v if self.min is None else min(self.min, v)
+        self.max = v if self.max is None else max(self.max, v)
+
+    def percentile(self, p: float) -> Optional[float]:
+        """Exact percentile over the current window (nearest-rank)."""
+        if not self.samples:
+            return None
+        xs = sorted(self.samples)
+        i = min(len(xs) - 1, max(0, int(round((p / 100.0) * (len(xs) - 1)))))
+        return xs[i]
+
+    @property
+    def mean(self) -> Optional[float]:
+        return (self.total / self.count) if self.count else None
+
+    def summary(self) -> Dict[str, Optional[float]]:
+        return {
+            "count": self.count,
+            "mean": self.mean,
+            "min": self.min,
+            "max": self.max,
+            "p50": self.percentile(50),
+            "p90": self.percentile(90),
+            "p99": self.percentile(99),
+        }
+
+
+class Registry:
+    """Create-on-first-use instrument registry.  Thread-safe creation (the
+    async checkpoint writer thread and the serve loop share the process
+    default); individual updates are plain attribute writes — GIL-atomic
+    for the int/float cases we use."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._counters: Dict[str, Counter] = {}
+        self._gauges: Dict[str, Gauge] = {}
+        self._hists: Dict[str, Histogram] = {}
+
+    def counter(self, name: str) -> Counter:
+        c = self._counters.get(name)
+        if c is None:
+            with self._lock:
+                c = self._counters.setdefault(name, Counter(name))
+        return c
+
+    def gauge(self, name: str) -> Gauge:
+        g = self._gauges.get(name)
+        if g is None:
+            with self._lock:
+                g = self._gauges.setdefault(name, Gauge(name))
+        return g
+
+    def histogram(self, name: str, window: int = 512) -> Histogram:
+        h = self._hists.get(name)
+        if h is None:
+            with self._lock:
+                h = self._hists.setdefault(name, Histogram(name, window))
+        return h
+
+    def snapshot(self) -> Dict[str, object]:
+        """Flat {name: value-or-summary} dict; histograms expand to their
+        summary dict.  Stable key order for diffable json."""
+        out: Dict[str, object] = {}
+        for n in sorted(self._counters):
+            out[n] = self._counters[n].value
+        for n in sorted(self._gauges):
+            if self._gauges[n].value is not None:
+                out[n] = self._gauges[n].value
+        for n in sorted(self._hists):
+            out[n] = self._hists[n].summary()
+        return out
+
+    def reset(self) -> None:
+        with self._lock:
+            self._counters.clear()
+            self._gauges.clear()
+            self._hists.clear()
+
+
+_default = Registry()
+
+
+def get_registry() -> Registry:
+    return _default
+
+
+def set_registry(registry: Registry) -> Registry:
+    """Swap the process default (tests); returns the previous one."""
+    global _default
+    old, _default = _default, registry
+    return old
+
+
+def count_dispatch(op: str, backend: str) -> None:
+    """Kernel-dispatch seam hook (kernels/ops.py): one counter per
+    (op, backend) pair.  Hot only at trace time — inside jit the Python
+    body runs once per compilation, so these count *dispatches*, i.e.
+    routing decisions, not per-step executions."""
+    _default.counter(f"kernels.dispatch.{op}.{backend}").inc()

@@ -46,6 +46,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import deque
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -53,6 +54,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding
 
+from repro.obs.metrics import Histogram, get_registry
+from repro.obs.trace import get_tracer
 from repro.serve import steps
 from repro.serve.kv_pool import KVPool
 from repro.serve.sampling import SamplerCache, request_key, token_key
@@ -137,6 +140,18 @@ class ServeEngine:
         self.results: Dict[int, List[int]] = {}
         self.status: Dict[int, str] = {}   # uid -> queued/active/done/timeout
         self.slot_history: Dict[int, int] = {}   # uid -> slot (tests)
+        # telemetry (engine-local so concurrent/sequential engines in one
+        # process don't bleed into each other's stats(); event counts are
+        # mirrored into the process registry for BENCH export).  Lifecycle
+        # counts are exactly-once by construction: "expired" increments
+        # where the request irrevocably leaves the system — scheduler.expire
+        # pops queued requests, _retire clears the slot of active ones.
+        self._counts = {"admitted": 0, "completed": 0, "expired": 0}
+        self._submit_t: Dict[int, float] = {}     # uid -> clock() at submit
+        self._ttft = Histogram("serve.ttft_ms", window=512)
+        self._tok_lat = Histogram("serve.tok_latency_ms", window=512)
+        self._decode_win: deque = deque(maxlen=256)  # (wall_s, toks) per tick
+        self._tick = 0
 
     # ------------------------------------------------------------- boot
 
@@ -161,6 +176,7 @@ class ServeEngine:
         uid = self.scheduler.submit(req)
         self.results[uid] = []
         self.status[uid] = "queued"
+        self._submit_t[uid] = self.clock()
         return uid
 
     @property
@@ -197,12 +213,23 @@ class ServeEngine:
         self.slots[a.slot] = None
         self.pool.free(a.slot)
         self.status[a.req.uid] = status
+        key = "completed" if status == "done" else "expired"
+        self._counts[key] += 1
+        get_registry().counter(f"serve.{key}").inc()
+        get_tracer().event("serve.retire", uid=a.req.uid, status=status,
+                           n_gen=a.n_gen)
 
     def _expire(self, now: float) -> None:
         """Time out requests past their deadline: active ones release their
-        KV slot back to the pool, queued ones never take one."""
+        KV slot back to the pool, queued ones never take one.  Each expiry
+        increments the counter exactly once — scheduler.expire removes a
+        queued request from the queue, _retire clears an active one's slot,
+        and a request is never in both states."""
         for req in self.scheduler.expire(now):
             self.status[req.uid] = "timeout"
+            self._counts["expired"] += 1
+            get_registry().counter("serve.expired").inc()
+            get_tracer().event("serve.expire_queued", uid=req.uid)
         for a in list(self.slots):
             if a is not None and a.req.deadline is not None \
                     and now >= a.req.deadline:
@@ -211,6 +238,8 @@ class ServeEngine:
     def _admit(self, emitted: List[Tuple[int, int]]) -> None:
         for req, bucket in self.scheduler.admit(self.pool.n_free):
             self.status[req.uid] = "active"
+            self._counts["admitted"] += 1
+            get_registry().counter("serve.admitted").inc()
             slot = self.pool.alloc()
             assert slot is not None
             P = len(req.prompt)
@@ -218,12 +247,21 @@ class ServeEngine:
             toks = np.zeros((1, Lp), np.int32)
             toks[0, :P] = req.prompt
             batch = self._put({"tokens": toks}, self._prefill.in_specs[1])
-            logits, caches = self._prefill.fn(
-                self.params, batch, jnp.full((1,), P - 1, jnp.int32))
+            with get_tracer().span("serve.prefill", uid=req.uid, slot=slot,
+                                   prompt_len=P, bucket=Lp, step=self._tick):
+                logits, caches = self._prefill.fn(
+                    self.params, batch, jnp.full((1,), P - 1, jnp.int32))
             self.pool.write_prefill(slot, caches, P)
             self.slot_history[req.uid] = slot
             key = request_key(req.seed)
             tok = self._sample(req, logits[0, 0], token_key(key, 0))
+            # TTFT on the engine clock: submit -> first generated token
+            # (one prefill; never waits on the decode batch)
+            t0 = self._submit_t.get(req.uid)
+            if t0 is not None:
+                ttft_ms = (self.clock() - t0) * 1e3
+                self._ttft.observe(ttft_ms)
+                get_registry().histogram("serve.ttft_ms").observe(ttft_ms)
             a = _Active(req=req, slot=slot, pos=P, n_gen=1,
                         last_token=tok, key=key)
             self._emit(a, tok)
@@ -238,10 +276,12 @@ class ServeEngine:
         decode over every occupied slot.  Returns the (uid, token) pairs
         emitted this step, in slot order."""
         emitted: List[Tuple[int, int]] = []
+        tracer = self._tick_begin()
         self._expire(self.clock())
         self._admit(emitted)
         active = [a for a in self.slots if a is not None]
         if not active:
+            self._tick_end(tracer)
             return emitted
         tokens = np.zeros((self.n_slots, 1), np.int32)
         pos = np.zeros((self.n_slots,), np.int32)
@@ -251,21 +291,67 @@ class ServeEngine:
         batch = self._put({"tokens": tokens}, self._decode.in_specs[2])
         pos_dev = jax.device_put(
             pos, NamedSharding(self.mesh, self._decode.in_specs[3]))
-        logits, self.pool.caches = self._decode.fn(
-            self.params, self.pool.caches, batch, pos_dev)
-        for a in active:
-            # device-side row slice: no full-batch host copy + re-upload
-            tok = self._sample(a.req, logits[a.slot, 0],
-                               token_key(a.key, a.n_gen))
-            a.n_gen += 1
-            a.pos += 1
-            self.pool.lengths[a.slot] += 1
-            a.last_token = tok
-            self._emit(a, tok)
-            emitted.append((a.req.uid, tok))
-            if self._finished(a, tok):
-                self._retire(a)
+        t0 = time.perf_counter()
+        with tracer.span("serve.decode", step=self._tick,
+                         batch=len(active)):
+            logits, self.pool.caches = self._decode.fn(
+                self.params, self.pool.caches, batch, pos_dev)
+            n_tok = 0
+            for a in active:
+                # device-side row slice: no full-batch host copy + re-upload
+                tok = self._sample(a.req, logits[a.slot, 0],
+                                   token_key(a.key, a.n_gen))
+                a.n_gen += 1
+                a.pos += 1
+                self.pool.lengths[a.slot] += 1
+                a.last_token = tok
+                self._emit(a, tok)
+                emitted.append((a.req.uid, tok))
+                n_tok += 1
+                if self._finished(a, tok):
+                    self._retire(a)
+        # every active sequence gained one token this tick, so the tick's
+        # wall time (decode + sampling) IS its per-token latency
+        dur = time.perf_counter() - t0
+        self._decode_win.append((dur, n_tok))
+        lat_ms = dur * 1e3
+        self._tok_lat.observe(lat_ms)
+        get_registry().histogram("serve.tok_latency_ms").observe(lat_ms)
+        self._tick_end(tracer)
         return emitted
+
+    def _tick_begin(self):
+        self._tick += 1
+        return get_tracer()
+
+    def _tick_end(self, tracer) -> None:
+        reg = get_registry()
+        reg.gauge("serve.slot_occupancy").set(self.n_active / self.n_slots)
+        reg.gauge("serve.queue_depth").set(len(self.scheduler))
+        tracer.flush()  # tick boundary: host telemetry only, never in-jit
+
+    def stats(self) -> Dict[str, Any]:
+        """Point-in-time snapshot: lifecycle counts, occupancy, and
+        sliding-window latency percentiles (the Histogram window bounds
+        memory; percentiles are exact over that window)."""
+        win = list(self._decode_win)
+        toks = sum(n for _, n in win)
+        secs = sum(d for d, _ in win)
+        return {
+            "admitted": self._counts["admitted"],
+            "completed": self._counts["completed"],
+            "expired": self._counts["expired"],
+            "queued": len(self.scheduler),
+            "active": self.n_active,
+            "occupancy": self.n_active / self.n_slots,
+            "steps": self._tick,
+            "ttft_ms": {"p50": self._ttft.percentile(50),
+                        "p99": self._ttft.percentile(99),
+                        "n": self._ttft.count},
+            "tok_latency_ms": {"p50": self._tok_lat.percentile(50),
+                               "p99": self._tok_lat.percentile(99)},
+            "tok_per_s": (toks / secs) if secs > 0 else None,
+        }
 
     def run(self, max_steps: Optional[int] = None) -> Dict[int, List[int]]:
         """Drive until every submitted request retires; returns

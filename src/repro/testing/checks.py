@@ -1448,3 +1448,194 @@ def check_qwz_gemm_head_matches_staged():
         np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5,
                                    err_msg=str(k))
         assert (got.argmax(-1) == want.argmax(-1)).all(), k
+
+
+# ---------------------------------------------------------------------------
+# observability: measured-vs-projected comm, telemetry replay, runtime gate
+# (DESIGN.md §8, obs/)
+# ---------------------------------------------------------------------------
+
+def _obs_crosscheck(variant: str, arch_name: str, n_layers: int = 4):
+    """Per-label wire bytes from the traced step's jaxpr must match the
+    analytic event model to 1% (in practice: to the byte) at every ring
+    depth.  Labels come from the ``zero.*`` named scopes in
+    core/collectives.py; the projection from ``Model.comm_events`` folded
+    through ``zeropp.step_wire_by_label``."""
+    from repro.launch.jaxpr_analysis import analyze_jaxpr
+    from repro.obs.report import GateFailure, runtime_gate
+    from repro.core.zeropp import step_wire_by_label
+    from repro.train import trainer as trainer_lib
+
+    for pf in (0, 1, 2):
+        mesh, arch, model, opt_cfg, ts, lm = _prefetch_env(
+            pf, variant=variant, arch_name=arch_name, n_layers=n_layers)
+        p_sh, o_sh = trainer_lib.state_shapes(model, opt_cfg)
+        params = _abstract_tree(p_sh, mesh, ts.in_specs[0])
+        opt = _abstract_tree(o_sh, mesh, ts.in_specs[1])
+        bsh = {"tokens": jax.ShapeDtypeStruct((16, 64), jnp.int32),
+               "targets": jax.ShapeDtypeStruct((16, 64), jnp.int32)}
+        batch = _abstract_tree(bsh, mesh, ts.in_specs[2])
+        cj = jax.make_jaxpr(ts.fn)(params, opt, batch)
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        measured = analyze_jaxpr(cj, sizes)["collectives"]["wire_by_label"]
+        projected = step_wire_by_label(model.comm_events(), model.zcfg,
+                                       sizes)
+        # unlabeled collectives (loss psums) carry no parameter traffic
+        assert measured.get("other", 0.0) == 0.0, measured
+        try:
+            runtime_gate(measured=measured, projected=projected,
+                         strict=True)
+        except GateFailure as e:
+            raise AssertionError(
+                f"{variant}/{arch_name} pf={pf}: {e}") from e
+
+
+def check_obs_comm_crosscheck():
+    """Dense stack, zeropp + baseline, prefetch depths 0/1/2 (satellite:
+    runtime counters vs comm_volume analytics must agree per label)."""
+    _obs_crosscheck("zeropp", "gpt-350m")
+    _obs_crosscheck("baseline", "gpt-350m")
+
+
+def check_obs_comm_crosscheck_moe():
+    """MoE stack (chunked experts, spec ring, hpZ recompute gathers):
+    the event enumeration must track the real schedule at every depth —
+    this is where qgZ scale bytes and per-chunk recompute gathers are
+    easiest to drop on either side."""
+    _obs_crosscheck("zeropp", "deepseek-moe-16b")
+
+
+def check_obs_telemetry_failure_replay():
+    """Telemetry under failure: a run killed at step 5 and restarted from
+    the step-4 checkpoint re-emits steps 4.. into the SAME append-mode
+    jsonl; ``replay_counters`` must dedupe the re-emitted steps so the
+    interrupted log replays to totals identical to an uninterrupted
+    oracle — and, truncated at the kill step, to the oracle's prefix."""
+    import os
+    import tempfile
+    from repro.obs.trace import read_events, replay_counters
+    from repro.testing.faults import StepFaults
+    from repro.train.elastic import ElasticConfig, Supervisor
+
+    d_o = tempfile.mkdtemp(prefix="obs_oracle_")
+    oracle = Supervisor(
+        ElasticConfig(steps=8, metrics_dir=d_o)).run_supervised()
+    assert oracle["status"] == "complete"
+    log_o = os.path.join(d_o, "events.jsonl")
+    tot_o = replay_counters(log_o)
+    assert tot_o["train.steps"] == 8, tot_o
+
+    d_i = tempfile.mkdtemp(prefix="obs_interrupted_")
+    ck = tempfile.mkdtemp(prefix="obs_ckpt_")
+    out = Supervisor(
+        ElasticConfig(steps=8, ckpt_dir=ck, ckpt_every=2,
+                      metrics_dir=d_i),
+        faults=StepFaults({5: "die"})).run_supervised()
+    assert out["restarts"] == 1 and out["final_step"] == 8
+    log_i = os.path.join(d_i, "events.jsonl")
+    tot_i = replay_counters(log_i)
+
+    # steps 4,5 were emitted twice (pre-kill + replay) yet count once
+    raw_step_recs = [r for r in read_events(log_i)
+                     if r.get("kind") == "counter"
+                     and r["name"] == "train.steps"]
+    assert len(raw_step_recs) > 8, len(raw_step_recs)
+    for key in ("train.steps", "train.tokens", "train.loss"):
+        assert tot_i[key] == tot_o[key], (key, tot_i[key], tot_o[key])
+
+    # prefix property: truncating the replay at the kill step matches the
+    # oracle truncated at the same step
+    pre_i = replay_counters(log_i, up_to_step=4)
+    pre_o = replay_counters(log_o, up_to_step=4)
+    for key in ("train.steps", "train.tokens", "train.loss"):
+        assert pre_i[key] == pre_o[key], (key, pre_i, pre_o)
+
+    # restart itself was recorded exactly once
+    evs = [r["name"] for r in read_events(log_i)
+           if r.get("kind") == "event"]
+    assert evs.count("elastic.restart") == 1, evs
+
+
+def check_obs_runtime_gate():
+    """The full measured-vs-projected gate on a REAL train run, plus the
+    disabled-telemetry overhead bound: alternate plain steps with steps
+    under the no-op tracer + guard and compare medians (alternation puts
+    machine noise on both sides)."""
+    import os
+    import tempfile
+    import time as _time
+    from repro.obs.metrics import Registry, set_registry
+    from repro.obs.report import runtime_gate
+    from repro.obs.trace import Tracer, set_tracer
+    from repro.launch.jaxpr_analysis import analyze_jaxpr
+    from repro.core.zeropp import step_wire_by_label
+    from repro.data.synthetic import make_batch
+    from repro.train.state import ZeroState
+    from repro.train.trainer import place_batch
+
+    mesh, arch, model, opt_cfg, ts, lm = _prefetch_env(1)
+    st = ZeroState(model, mesh, opt_cfg).init(jax.random.PRNGKey(0))
+    params, opt = st.params, st.opt
+    reg = Registry()
+    old_reg = set_registry(reg)
+    d = tempfile.mkdtemp(prefix="obs_gate_")
+    tracer = Tracer(os.path.join(d, "events.jsonl"))
+    off = Tracer(enabled=False)
+    old_tr = set_tracer(tracer)
+    try:
+        host = make_batch(arch, lm, 0, 16)
+        batch = place_batch(host, mesh, ts.in_specs[2])
+        cj = jax.make_jaxpr(ts.fn)(params, opt, batch)
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        comm = analyze_jaxpr(cj, sizes)["collectives"]["wire_by_label"]
+        params, opt, m = ts.fn(params, opt, batch)       # compile once
+        jax.block_until_ready(m["loss"])
+
+        # -- overhead: alternate plain steps with telemetry-DISABLED
+        # steps (no-op span + False guard — the production off path);
+        # medians over interleaved samples cancel machine drift
+        plain_s, off_s = [], []
+        telemetry = False
+        for i in range(1, 17):
+            host = make_batch(arch, lm, i, 16)
+            batch = place_batch(host, mesh, ts.in_specs[2])
+            t0 = _time.monotonic()
+            if i % 2:
+                with off.span("train.step", step=i):
+                    params, opt, m = ts.fn(params, opt, batch)
+                    jax.block_until_ready(m["loss"])
+                if telemetry:       # pragma: no cover — the off guard
+                    reg.counter("train.steps").inc()
+                off_s.append(_time.monotonic() - t0)
+            else:
+                params, opt, m = ts.fn(params, opt, batch)
+                jax.block_until_ready(m["loss"])
+                plain_s.append(_time.monotonic() - t0)
+
+        # -- a couple of fully-ENABLED steps: counters must accumulate
+        # exactly measured-per-step * n_steps
+        n_enabled = 2
+        for i in range(17, 17 + n_enabled):
+            host = make_batch(arch, lm, i, 16)
+            batch = place_batch(host, mesh, ts.in_specs[2])
+            with tracer.span("train.step", step=i):
+                params, opt, m = ts.fn(params, opt, batch)
+                jax.block_until_ready(m["loss"])
+            for lbl, b in comm.items():
+                reg.counter(f"comm.{lbl}.bytes").inc(b)
+            tracer.counter("train.steps", 1, step=i)
+            tracer.flush()
+        for lbl, b in comm.items():
+            got = reg.counter(f"comm.{lbl}.bytes").value
+            assert got == b * n_enabled, (lbl, got, b, n_enabled)
+
+        projected = step_wire_by_label(model.comm_events(), model.zcfg,
+                                       sizes)
+        report = runtime_gate(measured=comm, projected=projected,
+                              enabled_s=plain_s, disabled_s=off_s,
+                              overhead_tol=0.02, strict=True)
+        assert report["ok"], report
+    finally:
+        set_registry(old_reg)
+        set_tracer(old_tr)
+        tracer.close()

@@ -43,6 +43,8 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.obs.metrics import get_registry
+from repro.obs.trace import Tracer, get_tracer
 from repro.train.state import CheckpointError, ZeroState, _call_hook
 
 __all__ = ["WorkerDeath", "WriterStats", "AsyncCheckpointWriter",
@@ -196,11 +198,14 @@ class AsyncCheckpointWriter:
                 return
             step, (params, opt), meta = item
             try:
+                t0 = time.monotonic()
                 st = ZeroState(self.model, self.mesh, self.opt_cfg,
                                params=params, opt=opt, step=step)
                 path = st.save(self.ckpt_dir, step, meta=meta, fmt=self.fmt,
                                io_hooks=self._hooks, retries=self.retries,
                                backoff=self.backoff)
+                get_registry().histogram("elastic.ckpt.write_ms").observe(
+                    (time.monotonic() - t0) * 1e3)
                 with self._lock:
                     self.stats.completed += 1
                     self.stats.last_step, self.stats.last_path = step, path
@@ -253,6 +258,7 @@ class ElasticConfig:
     grace: float = 30.0          # seconds between preempt signal and exit
     max_restarts: int = 3
     log: bool = True
+    metrics_dir: Optional[str] = None   # jsonl event log + BENCH export
 
 
 class Supervisor:
@@ -287,6 +293,19 @@ class Supervisor:
         self.resharded: List[Tuple[int, int, int]] = []
         self._preempt = threading.Event()
         self._deadline: Optional[float] = None
+        # Per-step counter records go to an append-mode jsonl log so an
+        # in-process restart EXTENDS the history; replay_counters dedupes
+        # re-emitted steps (resume from an earlier checkpoint) per
+        # (name, step), which is the telemetry-under-failure invariant the
+        # fault harness asserts.  Without metrics_dir, the process tracer
+        # (usually the disabled singleton) is used and owns its own life.
+        if cfg.metrics_dir:
+            self.tracer: Tracer = Tracer(
+                os.path.join(cfg.metrics_dir, "events.jsonl"))
+            self._own_tracer = True
+        else:
+            self.tracer = get_tracer()
+            self._own_tracer = False
 
     # ------------------------------------------------------------ events
 
@@ -308,6 +327,9 @@ class Supervisor:
         signal.signal(signal.SIGTERM, handler)
 
     def _on_commit(self, step: int, path: str) -> None:
+        # runs on the writer thread: emit only (GIL-atomic list append);
+        # the step loop's per-step flush carries it to disk
+        self.tracer.event("elastic.ckpt.commit", step=step)
         self._log(f"committed step {step} -> {os.path.basename(path)}")
 
     def _make_writer(self, model, mesh, opt_cfg
@@ -340,6 +362,10 @@ class Supervisor:
                 if attempt > self.cfg.max_restarts or not self.cfg.ckpt_dir:
                     raise
                 self.restarts += 1
+                get_registry().counter("elastic.restarts").inc()
+                self.tracer.event("elastic.restart", attempt=attempt,
+                                  reason=str(e))
+                self.tracer.flush()
                 self._log(f"restarting after worker death "
                           f"({attempt}/{self.cfg.max_restarts}): {e}")
 
@@ -398,6 +424,9 @@ class Supervisor:
                 writer = self._make_writer(model, mesh, opt_cfg)
                 self.writer = writer
                 self.resharded.append((i, old_world, ts.world))
+                get_registry().counter("elastic.reshards").inc()
+                self.tracer.event("elastic.reshard", step=i,
+                                  old_world=old_world, new_world=ts.world)
                 self._log(f"reshard step {i} world {old_world}->{ts.world}"
                           f" (in-memory, no disk)")
             if self.faults is not None:
@@ -415,11 +444,23 @@ class Supervisor:
                 host = {k: v.reshape((cfg.accum, -1) + v.shape[1:])
                         for k, v in host.items()}
             batch = place_batch(host, mesh, b_specs)
-            params, opt, metrics = ts.fn(params, opt, batch)
-            loss = float(metrics["loss"])
+            t_step = time.monotonic()
+            with self.tracer.span("train.step", step=i):
+                params, opt, metrics = ts.fn(params, opt, batch)
+                loss = float(metrics["loss"])
+            get_registry().histogram("train.step.wall_ms").observe(
+                (time.monotonic() - t_step) * 1e3)
             self.losses[i] = loss
             if writer is not None:
                 writer.note_step()
+            # stepped counter records: replay-safe across restarts (dedupe
+            # per (name, step)); flushed+fsynced every step so a SIGKILL
+            # loses at most the line it sheared
+            self.tracer.counter("train.steps", 1, step=i)
+            self.tracer.counter("train.tokens", float(metrics["tokens"]),
+                                step=i)
+            self.tracer.counter("train.loss", loss, step=i)
+            self.tracer.flush()
             self._log(f"step {i} loss {loss!r}")
             i += 1
             if cfg.ckpt_dir and cfg.ckpt_every and i % cfg.ckpt_every == 0:
@@ -427,13 +468,19 @@ class Supervisor:
                         "data_cursor": i}
                 if writer is not None:
                     self._log(f"snapshot step {i} submitted")
+                    self.tracer.event("elastic.ckpt.submit", step=i)
                     writer.submit(i, params, opt, meta)
                 else:
-                    ZeroState(model, mesh, opt_cfg, params=params,
-                              opt=opt).save(
-                        cfg.ckpt_dir, i, meta=meta, fmt=cfg.ckpt_format,
-                        io_hooks=self.io_hooks, retries=cfg.retries,
-                        backoff=cfg.backoff)
+                    t0 = time.monotonic()
+                    with self.tracer.span("elastic.ckpt.sync_write", step=i):
+                        ZeroState(model, mesh, opt_cfg, params=params,
+                                  opt=opt).save(
+                            cfg.ckpt_dir, i, meta=meta, fmt=cfg.ckpt_format,
+                            io_hooks=self.io_hooks, retries=cfg.retries,
+                            backoff=cfg.backoff)
+                    get_registry().histogram(
+                        "elastic.ckpt.write_ms").observe(
+                        (time.monotonic() - t0) * 1e3)
                     self._log(f"committed step {i} (sync)")
 
         if status == "preempted":
@@ -445,6 +492,15 @@ class Supervisor:
         if writer is not None:
             writer.close()
         stats = writer.stats if writer is not None else None
+        reg = get_registry()
+        if stats is not None and stats.submitted:
+            reg.gauge("elastic.ckpt.overlap_fraction").set(
+                stats.steps_overlapped / stats.submitted)
+        self.tracer.event("elastic.run_end", status=status, final_step=i)
+        if self._own_tracer:
+            self.tracer.close()   # append-mode: a restart re-opens cleanly
+        else:
+            self.tracer.flush()
         return {"status": status, "final_step": i,
                 "losses": dict(self.losses), "restarts": self.restarts,
                 "resharded": list(self.resharded),

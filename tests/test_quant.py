@@ -121,7 +121,12 @@ def test_wire_bytes_accounting():
     n = 1 << 20
     assert cfg8.payload_bytes(n) == n          # 2x reduction vs bf16 (2n)
     assert cfg4.payload_bytes(n) == n // 2     # 4x reduction vs bf16
-    assert cfg8.wire_bytes(n) == n + (n // 256) * 2
+    # scales are fp32 on the wire (quantize_blockwise emits float32 and the
+    # collectives move them as-is): 4 bytes per block, not 2.  The old
+    # 2-byte default silently undercounted every analytic comm number;
+    # caught by the measured-vs-projected runtime gate (obs/report.py).
+    assert cfg8.wire_bytes(n) == n + (n // 256) * 4
+    assert cfg8.wire_bytes(n, scale_bytes=2) == n + (n // 256) * 2
 
 
 def test_payload_bytes_odd_int4_ceil():
@@ -131,7 +136,7 @@ def test_payload_bytes_odd_int4_ceil():
     for n in (1, 3, 255, 1001):
         assert cfg4.payload_bytes(n) == (n + 1) // 2, n
         nblocks = -(-n // 256)
-        assert cfg4.wire_bytes(n) == (n + 1) // 2 + nblocks * 2, n
+        assert cfg4.wire_bytes(n) == (n + 1) // 2 + nblocks * 4, n
     assert cfg4.payload_bytes(256) == 128
     assert QuantConfig(bits=8, block_size=256).payload_bytes(1001) == 1001
 
