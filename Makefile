@@ -9,7 +9,7 @@ MP8       = XLA_FLAGS=--xla_force_host_platform_device_count=8
 PYPATH    = PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH}
 
 .PHONY: test test-fast bench-smoke bench ckpt-smoke serve-smoke moe-smoke \
-        ring-smoke fault-smoke kernel-smoke obs-smoke
+        ring-smoke fault-smoke kernel-smoke obs-smoke tune-smoke
 
 # tier-1 verify (ROADMAP.md): full suite, stop on first failure
 test:
@@ -124,6 +124,23 @@ obs-smoke:
 	print('obs smoke OK: comm counters match analytics, replay survives '\
 	      'kill/restart, runtime gate passes')"
 	$(PYPATH) $(PY) -m benchmarks.runtime_report
+
+# tuner smoke (repro/tune, DESIGN.md §9): the (k+1)-ring HBM ledger vs
+# the MEASURED live gathered-buffer counts in the traced train step for
+# prefetch 0..3, the --tune=static boot path (build_everything resolves
+# to the same frozen policy as a direct resolve call and trains), then
+# the static resolution sweep checked against the committed
+# BENCH_tuner.json snapshot (deterministic by the static-profile
+# contract)
+tune-smoke:
+	$(PYPATH) $(PY) -c "\
+	from repro.testing.subproc import run_checks; \
+	run_checks(['check_tune_ledger_live_buffers', \
+	            'check_tune_static_resolve_boot'], n_devices=8, \
+	           timeout=1800); \
+	print('tune smoke OK: ledger matches live ring buffers at k=0..3, '\
+	      'static boot path resolves deterministically')"
+	$(PYPATH) $(PY) -m benchmarks.tuner_report
 
 # overlap benchmark + suite smoke in one command: verifies the prefetched
 # schedule from compiled HLO on the 8-device CPU mesh, then prints the

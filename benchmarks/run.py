@@ -11,6 +11,10 @@
   runtime_report   — telemetry-on train + serve run (obs/): BENCH snapshot
                      with the measured-vs-projected comm gate in assert
                      mode, serve latency percentiles, dispatch counts
+  tuner_report     — static boot-time resolution sweep (repro.tune):
+                     resolved knobs + (k+1)-ring HBM ledger + break-even
+                     depth per arch x mesh, checked against the committed
+                     deterministic snapshot
   roofline         — §Roofline table from the dry-run JSONs (if present)
 
 Any section that raises marks the whole run failed (nonzero exit) — no
@@ -29,7 +33,7 @@ import traceback
 def main() -> None:
     from benchmarks import (comm_volume, convergence, kernel_bench,
                             memory_model, overlap_bench, roofline,
-                            runtime_report, throughput_model)
+                            runtime_report, throughput_model, tuner_report)
     sections = {
         "comm_volume": comm_volume.main,
         "throughput_model": throughput_model.main,
@@ -38,6 +42,7 @@ def main() -> None:
         "convergence": convergence.main,
         "overlap_bench": overlap_bench.main,
         "runtime_report": runtime_report.main,
+        "tuner_report": tuner_report.main,
     }
     pick = [a for a in sys.argv[1:] if a in sections] or list(sections)
     failures = []

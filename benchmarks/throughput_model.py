@@ -57,7 +57,9 @@ MEASURED_MOE_OVERLAP = 0.80
 # beat, but latency is per-collective and hides under k iterations.
 COLL_LATENCY = 20e-6
 # collectives issued per layer per step under full ZeRO++ (qwZ payload +
-# scales gathers fwd, hpZ gather bwd, qgZ reduce hops)
+# scales gathers fwd, hpZ gather bwd, qgZ reduce hops — each hop moves
+# payload AND bitcast scales as ONE all-to-all message since the scale
+# packing change in core/collectives.py, so the hops count one launch)
 COLLS_PER_LAYER = 4
 
 
@@ -83,20 +85,21 @@ def comm_bytes_per_step(n_params: int, variant: str) -> Dict[str, float]:
 
 
 def step_time(n_params: int, tokens_dev: int, variant: str,
-              slow_bw: float) -> float:
+              slow_bw: float, fast_bw: float = FAST_BW) -> float:
     c = 8.0 * n_params * tokens_dev / PEAK
     b = comm_bytes_per_step(n_params, variant)
-    return c + b["slow"] / slow_bw + b["fast"] / FAST_BW
+    return c + b["slow"] / slow_bw + b["fast"] / fast_bw
 
 
 def step_time_overlap(n_params: int, tokens_dev: int, variant: str,
                       slow_bw: float,
-                      overlap: float = MEASURED_OVERLAP) -> float:
+                      overlap: float = MEASURED_OVERLAP,
+                      fast_bw: float = FAST_BW) -> float:
     """Prefetched-schedule step time: ``overlap`` of the comm rides under
     compute, the rest stays exposed (see module docstring)."""
     c = 8.0 * n_params * tokens_dev / PEAK
     b = comm_bytes_per_step(n_params, variant)
-    t_comm = b["slow"] / slow_bw + b["fast"] / FAST_BW
+    t_comm = b["slow"] / slow_bw + b["fast"] / fast_bw
     return max(c, overlap * t_comm) + (1.0 - overlap) * t_comm
 
 
@@ -130,12 +133,17 @@ def step_time_ring(n_params: int, tokens_dev: int, variant: str,
                    slow_bw: float, depth: int, n_layers: int = 48,
                    overlap: float = MEASURED_OVERLAP,
                    latency: float = COLL_LATENCY,
-                   colls_per_layer: int = COLLS_PER_LAYER) -> float:
+                   colls_per_layer: int = COLLS_PER_LAYER,
+                   fast_bw: float = FAST_BW) -> float:
     """Step time under a depth-``depth`` prefetch ring (depth=0 is the
-    synchronous schedule; depth=1 the classic double buffer)."""
+    synchronous schedule; depth=1 the classic double buffer).
+
+    ``slow_bw``/``fast_bw``/``latency`` default to the analytic constants
+    for the paper-figure sweeps; the boot-time tuner (repro.tune) feeds
+    the *measured* coefficients from its mesh probe instead."""
     c = 8.0 * n_params * tokens_dev / PEAK
     b = comm_bytes_per_step(n_params, variant)
-    t_comm = b["slow"] / slow_bw + b["fast"] / FAST_BW
+    t_comm = b["slow"] / slow_bw + b["fast"] / fast_bw
     t_lat = colls_per_layer * latency * n_layers
     if depth < 1:
         return c + t_comm + t_lat
@@ -155,20 +163,34 @@ def break_even_depth(n_params: int, tokens_dev: int, variant: str,
                      slow_bw: float, n_layers: int = 48,
                      overlap: float = MEASURED_OVERLAP,
                      latency: float = COLL_LATENCY,
-                     colls_per_layer: int = COLLS_PER_LAYER) -> int:
+                     colls_per_layer: int = COLLS_PER_LAYER,
+                     fast_bw: float = FAST_BW) -> int:
     """Smallest ring depth after which deepening stops paying (capped at
     n_layers-1, the ring's hard clamp)."""
     d = 1
     while d < n_layers - 1:
         t_now = step_time_ring(n_params, tokens_dev, variant, slow_bw, d,
-                               n_layers, overlap, latency, colls_per_layer)
+                               n_layers, overlap, latency, colls_per_layer,
+                               fast_bw)
         t_next = step_time_ring(n_params, tokens_dev, variant, slow_bw,
                                 d + 1, n_layers, overlap, latency,
-                                colls_per_layer)
+                                colls_per_layer, fast_bw)
         if t_next >= t_now - 1e-12:
             return d
         d += 1
     return d
+
+
+def ring_coeffs(profile, intra_axis: str = "model") -> Dict[str, float]:
+    """Map a ``repro.tune.probe.ProbeProfile`` onto this model's
+    coefficients — the kwargs :func:`step_time_ring` /
+    :func:`break_even_depth` accept in place of the analytic constants."""
+    inter = tuple(a for a in profile.mesh_axes if a != intra_axis)
+    return {
+        "slow_bw": profile.slow_bw(inter or profile.mesh_axes),
+        "fast_bw": profile.fast_bw(intra_axis),
+        "latency": profile.coll_latency(),
+    }
 
 
 # ---------------------------------------------------------------------------

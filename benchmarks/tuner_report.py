@@ -1,0 +1,134 @@
+"""Boot-time tuner report: static resolution across archs x meshes.
+
+Sweeps ``repro.tune.resolve`` in ``--tune=static`` mode (the committed
+deterministic profile — no devices, no probing, microseconds per cell)
+over representative archs and mesh shapes, and emits one BENCH json with,
+per cell:
+
+  * every resolved ZeRO++ knob (prefetch, qwZ/hpZ/qgZ + block sizes,
+    moments dtype, accum, kernel backend) and the decision trail;
+  * the (k+1)-ring HBM ledger (total, ring bytes, headroom, fits);
+  * the throughput model's break-even ring depth evaluated with the
+    profile's probed coefficients (``throughput_model.ring_coeffs``).
+
+The sweep is deterministic by the static-profile contract, so the
+snapshot ``snapshots/BENCH_tuner.json`` is committed and ``main()``
+compares the fresh sweep against it exactly — any drift in resolver
+behaviour fails the benchmark run (and CI's tune-smoke).  Refresh the
+snapshot deliberately with ``--write-snapshot`` after an intentional
+resolver change.
+
+Run: PYTHONPATH=src python -m benchmarks.tuner_report [--write-snapshot]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict
+
+GB = 1 << 30
+
+SNAPSHOT = os.path.join(os.path.dirname(__file__), "snapshots",
+                        "BENCH_tuner.json")
+
+# arch x mesh cells: a dense smoke model, the paper-scale dense stacks,
+# and the MoE config (expert-chunk ring + total-vs-active param split)
+CELLS = [
+    ("gpt-350m", {"data": 4, "model": 2}),
+    ("gpt-18b", {"data": 16, "model": 16}),
+    ("qwen1.5-110b", {"pod": 2, "data": 16, "model": 16}),
+    ("deepseek-moe-16b", {"data": 16, "model": 16}),
+]
+
+TOKENS_PER_DEVICE = 2048
+HBM_BUDGET = 16 * GB          # v5e
+
+
+def _cell(arch_name: str, sizes: Dict[str, int]) -> Dict:
+    from repro.configs import get_config
+    from repro.tune import resolve
+    from benchmarks import throughput_model as tm
+
+    arch = get_config(arch_name)
+    axes = tuple(sizes)
+    rp = resolve(arch, axes, "zeropp", mode="static", mesh_sizes=sizes,
+                 hbm_budget_bytes=HBM_BUDGET,
+                 tokens_per_device=TOKENS_PER_DEVICE)
+    d = rp.as_dict()
+    led = d.get("ledger", {})
+    ring = sum(b for n, b in led.get("lines", {}).items()
+               if n.startswith("ring_"))
+    world = 1
+    for s in sizes.values():
+        world *= s
+    coeffs = tm.ring_coeffs(rp.profile)
+    be = tm.break_even_depth(rp.n_params // world, TOKENS_PER_DEVICE,
+                             "zeropp", n_layers=arch.n_layers, **coeffs)
+    return {
+        "mesh": dict(sizes),
+        "policy": {k: d[k] for k in
+                   ("mode", "kernel_backend", "n_params", "train_accum",
+                    "moments_dtype", "qwz", "hpz", "qgz", "qwz_block",
+                    "qgz_block", "hpz_axes", "prefetch",
+                    "profile_source")},
+        "decisions": d["decisions"],
+        "ledger": {"total_bytes": led.get("total_bytes"),
+                   "ring_bytes": ring,
+                   "headroom_bytes": led.get("headroom_bytes"),
+                   "fits": led.get("fits"),
+                   "ring_buffers": led.get("ring_buffers")},
+        "break_even_depth": be,
+        "probed_coeffs": {k: float(v) for k, v in coeffs.items()},
+    }
+
+
+def sweep() -> Dict:
+    cells = {}
+    for arch_name, sizes in CELLS:
+        mesh_tag = "x".join(str(sizes[a]) for a in sizes)
+        cells[f"{arch_name}@{mesh_tag}"] = _cell(arch_name, sizes)
+    return {"tuner": {
+        "cells": cells,
+        "config": {"mode": "static", "hbm_budget_bytes": HBM_BUDGET,
+                   "tokens_per_device": TOKENS_PER_DEVICE,
+                   "variant": "zeropp"},
+    }}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--write-snapshot", action="store_true",
+                    help=f"refresh {SNAPSHOT}")
+    args, _ = ap.parse_known_args()
+
+    doc = sweep()
+    print("BENCH " + json.dumps(doc))
+    print(f"\n{'cell':<28} {'pf':>2} {'qwZ':>4} {'hpZ':>4} {'qgZ':>4} "
+          f"{'ledger_gb':>9} {'ring_gb':>8} {'fits':>5} {'breakeven':>9}")
+    for name, c in doc["tuner"]["cells"].items():
+        p, led = c["policy"], c["ledger"]
+        print(f"{name:<28} {p['prefetch']:>2} {str(p['qwz']):>4} "
+              f"{str(p['hpz']):>4} {str(p['qgz']):>4} "
+              f"{led['total_bytes'] / GB:>9.2f} "
+              f"{led['ring_bytes'] / GB:>8.3f} {str(led['fits']):>5} "
+              f"{c['break_even_depth']:>9}")
+
+    if args.write_snapshot:
+        with open(SNAPSHOT, "w") as fh:
+            json.dump(doc, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"wrote {SNAPSHOT}")
+    elif os.path.exists(SNAPSHOT):
+        with open(SNAPSHOT) as fh:
+            want = json.load(fh)
+        # static resolution is deterministic by contract: exact equality
+        assert doc == want, (
+            "tuner sweep drifted from committed snapshot — intentional "
+            "resolver changes must refresh it via --write-snapshot")
+        print(f"snapshot check OK ({SNAPSHOT})")
+    return doc
+
+
+if __name__ == "__main__":
+    main()

@@ -226,6 +226,30 @@ def _quantize_slices(x: Array, cfg: QuantConfig,
     return quantize_blockwise(x, cfg, key)
 
 
+def _pack_scales(payload: Array, scales: Array) -> Array:
+    """Append the fp32 block scales to the int8 payload, trailing dim.
+
+    The scales are bitcast to 4 int8 lanes each (lossless) and
+    concatenated after the payload so ONE all-to-all moves both — same
+    wire bytes as two messages (all_to_all volume is linear in message
+    size), one less collective launch per hop.  Inverse:
+    :func:`_unpack_scales`.
+    """
+    sb = lax.bitcast_convert_type(scales, jnp.int8)        # (..., NB, 4)
+    sb = sb.reshape(*scales.shape[:-1], scales.shape[-1] * 4)
+    return jnp.concatenate([payload, sb], axis=-1)
+
+
+def _unpack_scales(msg: Array, payload_len: int) -> Tuple[Array, Array]:
+    """Split a :func:`_pack_scales` message back into (payload, scales)."""
+    payload = msg[..., :payload_len]
+    sb = msg[..., payload_len:]
+    nb = sb.shape[-1] // 4
+    scales = lax.bitcast_convert_type(
+        sb.reshape(*sb.shape[:-1], nb, 4), jnp.float32)
+    return payload, scales
+
+
 def qgz_reduce_scatter(
     grad: Array,
     intra_axis: str,
@@ -283,10 +307,12 @@ def qgz_reduce_scatter(
         payload, scales = quantize_reordered(slices, cfg, k1)
 
         # -- step 2: intra-node hop over the fast axis ---------------------
-        payload = lax.all_to_all(payload, intra_axis, split_axis=0,
-                                 concat_axis=0)
-        scales = lax.all_to_all(scales, intra_axis, split_axis=0,
-                                concat_axis=0)
+        # scales ride the SAME all-to-all message as the payload (bitcast
+        # to int8 lanes, split off on receipt): identical wire bytes, one
+        # collective launch per hop instead of two
+        msg = lax.all_to_all(_pack_scales(payload, scales), intra_axis,
+                             split_axis=0, concat_axis=0)
+        payload, scales = _unpack_scales(msg, payload.shape[-1])
         # payload[x'] is peer x''s contribution to my (Y, L) slice group
 
         if not inter_axes:  # single-tier world: already the final slice
@@ -303,11 +329,12 @@ def qgz_reduce_scatter(
         scales2 = scales2.reshape(Y, -1)
 
         # -- step 3: inter-node hop over the slow axes ---------------------
-        payload2 = lax.all_to_all(payload2[:, None], inter_axes,
-                                  split_axis=0, concat_axis=1)  # (1, Y, Lp)
-        scales2 = lax.all_to_all(scales2[:, None], inter_axes,
-                                 split_axis=0, concat_axis=1)
-        out = dequant_reduce(payload2[0], scales2[0], cfg)      # (L,) fp32
+        # packed payload+scales again: one message per hop
+        msg2 = lax.all_to_all(_pack_scales(payload2, scales2)[:, None],
+                              inter_axes, split_axis=0,
+                              concat_axis=1)                    # (1, Y, .)
+        payload2, scales2 = _unpack_scales(msg2[0], payload2.shape[-1])
+        out = dequant_reduce(payload2, scales2, cfg)            # (L,) fp32
         return out.astype(out_dtype)
 
 
@@ -333,10 +360,9 @@ def qgz_reduce_scatter_1hop(
     with _annotate("zero.qgz_reduce1hop"):
         slices = grad.reshape(world, L)
         payload, scales = _quantize_slices(slices, cfg, key)
-        payload = lax.all_to_all(payload, _axes_tuple(axes), split_axis=0,
-                                 concat_axis=0)
-        scales = lax.all_to_all(scales, _axes_tuple(axes), split_axis=0,
-                                concat_axis=0)
+        msg = lax.all_to_all(_pack_scales(payload, scales),
+                             _axes_tuple(axes), split_axis=0, concat_axis=0)
+        payload, scales = _unpack_scales(msg, payload.shape[-1])
         deq = dequantize_blockwise(payload, scales, cfg)
         return jnp.sum(deq, axis=0).astype(out_dtype)
 

@@ -82,11 +82,14 @@ class QuantConfig:
         """Payload + scales actually moved on the wire for n elements.
 
         Scales are float32 — 4 bytes each — end to end: quantize_blockwise
-        emits fp32 scales and the qwZ/qgZ collectives gather/all-to-all
-        them as-is, on separate collectives from the payload.  (This
-        default was 2 for a long time, silently under-counting every
-        analytic comm-volume number by 2 bytes per block; the runtime
-        jaxpr-measured counters caught it.)"""
+        emits fp32 scales and the collectives move them losslessly.  qwZ
+        gathers them on a second all-gather; the qgZ all-to-alls pack them
+        INTO the payload message (bitcast to int8 lanes — see
+        collectives._pack_scales), so either way the wire total is
+        payload + 4·n_blocks.  (This default was 2 for a long time,
+        silently under-counting every analytic comm-volume number by
+        2 bytes per block; the runtime jaxpr-measured counters caught
+        it.)"""
         nblocks = -(-n // self.block_size)
         return self.payload_bytes(n) + nblocks * scale_bytes
 
@@ -109,6 +112,44 @@ def _round(x: Array, stochastic: bool, key: Optional[Array]) -> Array:
     p_up = x - lo
     u = jax.random.uniform(key, x.shape, dtype=x.dtype)
     return lo + (u < p_up).astype(x.dtype)
+
+
+def stochastic_uniform(shape: Tuple[int, ...], cfg: QuantConfig,
+                       key: Array) -> Array:
+    """The exact uniform field ``quantize_blockwise(x, cfg, key)`` draws.
+
+    Reproduces the reference's segmentation structure — 1-D buffers split
+    into ``_segments`` with per-segment keys, large multi-dim arrays mapped
+    over rows with per-row keys, everything else a single draw on the
+    blocked shape — so the same ``key`` yields bit-identical rounding
+    whether the comparison ``u < x·inv − floor(x·inv)`` runs in the jnp
+    reference or inside a Pallas kernel fed this field as an extra input
+    (kernels/ops.py threads it through).  Returns float32 of ``shape``.
+    """
+    n = shape[-1]
+    if n % cfg.block_size:
+        raise ValueError(f"trailing dim {n} not a multiple of block "
+                         f"{cfg.block_size}")
+    if len(shape) == 1:
+        nseg = _segments(n, cfg.block_size)
+        if nseg > 1:
+            seg = n // nseg
+            u = jax.lax.map(lambda k: stochastic_uniform((seg,), cfg, k),
+                            jax.random.split(key, nseg))
+            return u.reshape(-1)
+    else:
+        size = 1
+        for s in shape:
+            size *= s
+        if size > _SEG_ELEMS and n <= _SEG_ELEMS:
+            nrows = size // n
+            u = jax.lax.map(lambda k: stochastic_uniform((n,), cfg, k),
+                            jax.random.split(key, nrows))
+            return u.reshape(*shape[:-1], n)
+    nblocks = n // cfg.block_size
+    u = jax.random.uniform(
+        key, (*shape[:-1], nblocks, cfg.block_size), dtype=jnp.float32)
+    return u.reshape(shape)
 
 
 def quantize_blockwise(

@@ -316,7 +316,10 @@ def comm_volume_per_step(n_params: int, z: ZeroConfig,
 # these formulas give the PER-DEVICE bytes one collective invocation puts
 # on the wire, exactly as launch/jaxpr_analysis.py measures them from the
 # jaxpr (all_gather: out-in; scatter: in-out; all_to_all: in·(g-1)/g),
-# with fp32 scales riding their own collectives (quant.wire_bytes).
+# with fp32 scales on the wire losslessly (quant.wire_bytes): qwZ gathers
+# them on a second all-gather; qgZ bitcasts them to int8 lanes and packs
+# them into the payload all-to-all (collectives._pack_scales) — all_to_all
+# wire is linear in message size, so the per-label byte total is identical.
 # The labels match the named_scope names in core/collectives.py; the
 # measured-vs-projected gate (obs/report.py) compares per-label sums.
 

@@ -17,10 +17,19 @@ Selection: ``set_backend()`` / ``use_backend()`` here, the
 (tpu: pallas, else xla).  The legacy ``FORCE`` module global is still
 honoured (oldest precedence name for ``set_backend``).
 
-Stochastic rounding (``cfg.stochastic`` / a PRNG key) always routes to the
-``xla`` reference: threading jax PRNG keys into the kernels is not yet
-implemented, and the dispatch layer must never be silently wrong — the
-fallback is explicit here and documented in DESIGN.md §7.
+Stochastic rounding threads PRNG keys into the kernels by drawing the
+uniform field OUTSIDE the pallas_call (``core.quant.stochastic_uniform``
+reproduces the reference's segmentation and key-split structure exactly)
+and passing it as an extra tiled input: the in-kernel comparison
+``u < s - floor(s)`` is then bit-identical to the jnp reference, so the
+determinism-through-dispatch contract (fixed key -> identical payloads on
+every backend) holds with the kernels actually running.  Two deliberate
+xla routes remain: ``cfg.stochastic`` with ``key=None`` goes to the
+reference to hit its loud "needs a PRNG key" assert, and the fused
+``dequant_reduce_quant`` still falls back for stochastic requants (its
+intra-hop output feeds a second quantize whose segmentation the fused
+kernel does not reproduce) — that one fallback stays documented in
+DESIGN.md §7.
 """
 from __future__ import annotations
 
@@ -89,13 +98,20 @@ def quantize_blockwise(x: Array, cfg: QuantConfig,
                        key: Optional[Array] = None) -> Tuple[Array, Array]:
     """Blockwise quantize the trailing dim (qwZ shard quantize; qgZ hop 1)."""
     mode = backend()
-    if mode == "xla" or cfg.stochastic or key is not None:
+    if mode == "xla" or (cfg.stochastic and key is None):
+        # second arm: reference raises the loud "needs a PRNG key" assert
         from repro.core.quant import quantize_blockwise as q
         _count_dispatch("quantize_blockwise", "xla")
         return q(x, cfg, key)
     _count_dispatch("quantize_blockwise", mode)
+    u = None
+    if cfg.stochastic:
+        from repro.core.quant import stochastic_uniform
+        u = stochastic_uniform(x.shape, cfg, key)
     x2, lead = _as2d(x)
-    p, s = _qb.quantize_pallas(x2, cfg, interpret=(mode == "interpret"))
+    u2 = None if u is None else u.reshape(x2.shape)
+    p, s = _qb.quantize_pallas(x2, cfg, u=u2,
+                               interpret=(mode == "interpret"))
     return p.reshape(*lead, p.shape[-1]), s.reshape(*lead, s.shape[-1])
 
 
@@ -120,13 +136,19 @@ def quantize_reordered(x: Array, cfg: QuantConfig,
     """(Y, X, L) -> transpose to (X, Y, L), quantize trailing dim — qgZ
     step 1 with the remap folded into the kernel's BlockSpec index_map."""
     mode = backend()
-    if mode == "xla" or cfg.stochastic or key is not None:
+    if mode == "xla" or (cfg.stochastic and key is None):
         xt = jnp.swapaxes(x, 0, 1)
         from repro.core.quant import quantize_blockwise as q
         _count_dispatch("quantize_reordered", "xla")
         return q(xt, cfg, key)
     _count_dispatch("quantize_reordered", mode)
-    return _qb.quantize_reordered_pallas(x, cfg,
+    u = None
+    if cfg.stochastic:
+        # the reference draws on the transposed (X, Y, L) layout
+        from repro.core.quant import stochastic_uniform
+        Y, X, L = x.shape
+        u = stochastic_uniform((X, Y, L), cfg, key)
+    return _qb.quantize_reordered_pallas(x, cfg, u=u,
                                          interpret=(mode == "interpret"))
 
 
@@ -147,6 +169,7 @@ def dequant_reduce_quant(payload: Array, scales: Array, cfg_in: QuantConfig,
     """Fused dequant -> fp32 reduce -> requant (qgZ intra-hop, §4.2)."""
     mode = backend()
     if mode == "xla" or cfg_out.stochastic or key is not None:
+        # the one remaining stochastic fallback (see module docstring)
         acc = _ref.dequant_reduce_ref(payload, scales, cfg_in, jnp.float32)
         from repro.core.quant import quantize_blockwise as q
         _count_dispatch("dequant_reduce_quant", "xla")

@@ -61,15 +61,28 @@ def pick_tiles(rows: int, cols: int, block: int) -> Tuple[int, int]:
 # quantize
 # ---------------------------------------------------------------------------
 
-def _quant_body(x, block: int, qmax: float, pack: bool):
-    """Shared math: (rt, ct) float tile -> (payload, scales)."""
+def _quant_body(x, block: int, qmax: float, pack: bool, u=None):
+    """Shared math: (rt, ct) float tile -> (payload, scales).
+
+    ``u`` (optional, same tile shape as ``x``) is a pre-drawn uniform field
+    for stochastic rounding: ``q = floor(s) + (u < s - floor(s))`` — the
+    exact comparison core.quant._round performs, so a field produced by
+    core.quant.stochastic_uniform rounds bit-identically to the reference.
+    """
     rt, ct = x.shape
     nb = ct // block
     xb = x.astype(jnp.float32).reshape(rt, nb, block)
     absmax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
     scale = absmax / qmax
     inv = jnp.where(scale > 0, 1.0 / jnp.where(scale > 0, scale, 1.0), 0.0)
-    q = jnp.clip(jnp.round(xb * inv), -qmax, qmax).astype(jnp.int8)
+    scaled = xb * inv
+    if u is None:
+        q = jnp.round(scaled)
+    else:
+        ub = u.astype(jnp.float32).reshape(rt, nb, block)
+        lo = jnp.floor(scaled)
+        q = lo + (ub < scaled - lo).astype(jnp.float32)
+    q = jnp.clip(q, -qmax, qmax).astype(jnp.int8)
     q = q.reshape(rt, ct)
     if pack:  # int4: two nibbles per byte along the trailing dim
         q2 = q.reshape(rt, ct // 2, 2)
@@ -83,11 +96,21 @@ def _quant_kernel(x_ref, payload_ref, scale_ref, *, block, qmax, pack):
     scale_ref[...] = s
 
 
+def _quant_kernel_sr(x_ref, u_ref, payload_ref, scale_ref, *, block, qmax,
+                     pack):
+    q, s = _quant_body(x_ref[...], block, qmax, pack, u=u_ref[...])
+    payload_ref[...] = q
+    scale_ref[...] = s
+
+
 def quantize_pallas(x: Array, cfg: QuantConfig,
+                    u: Array = None,
                     interpret: bool = False) -> Tuple[Array, Array]:
     """Blockwise quantize the trailing dim of a 2-D array.
 
     x: (R, C) float, C % cfg.block_size == 0.
+    u: optional (R, C) float32 uniform field -> stochastic rounding (same
+       tiling as x; see core.quant.stochastic_uniform).
     Returns (payload int8 (R, C or C//2), scales f32 (R, C//block)).
     """
     R, C = x.shape
@@ -98,12 +121,20 @@ def quantize_pallas(x: Array, cfg: QuantConfig,
     nbt = ct // block
     pt = ct // 2 if pack else ct
     grid = (R // rt, C // ct)
-    kernel = functools.partial(_quant_kernel, block=block, qmax=cfg.qmax,
-                               pack=pack)
+    x_spec = pl.BlockSpec((rt, ct), lambda i, j: (i, j))
+    if u is None:
+        kernel = functools.partial(_quant_kernel, block=block, qmax=cfg.qmax,
+                                   pack=pack)
+        in_specs, operands = [x_spec], (x,)
+    else:
+        assert u.shape == x.shape, (u.shape, x.shape)
+        kernel = functools.partial(_quant_kernel_sr, block=block,
+                                   qmax=cfg.qmax, pack=pack)
+        in_specs, operands = [x_spec, x_spec], (x, u)
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[pl.BlockSpec((rt, ct), lambda i, j: (i, j))],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((rt, pt), lambda i, j: (i, j)),
             pl.BlockSpec((rt, nbt), lambda i, j: (i, j)),
@@ -113,7 +144,7 @@ def quantize_pallas(x: Array, cfg: QuantConfig,
             jax.ShapeDtypeStruct((R, C // block), jnp.float32),
         ],
         interpret=interpret,
-    )(x)
+    )(*operands)
 
 
 # ---------------------------------------------------------------------------
@@ -174,13 +205,28 @@ def _quant3_kernel(x_ref, payload_ref, scale_ref, *, block, qmax, pack):
     scale_ref[...] = s.reshape(x_ref.shape[0], x_ref.shape[1], -1)
 
 
+def _quant3_kernel_sr(x_ref, u_ref, payload_ref, scale_ref, *, block, qmax,
+                      pack):
+    x = x_ref[...]
+    q, s = _quant_body(x.reshape(1, -1), block, qmax, pack,
+                       u=u_ref[...].reshape(1, -1))
+    payload_ref[...] = q.reshape(x_ref.shape[0], x_ref.shape[1], -1)
+    scale_ref[...] = s.reshape(x_ref.shape[0], x_ref.shape[1], -1)
+
+
 def quantize_reordered_pallas(x: Array, cfg: QuantConfig,
+                              u: Array = None,
                               interpret: bool = False) -> Tuple[Array, Array]:
     """Transpose (Y, X, L) -> (X, Y, L) and quantize trailing dim, fused.
 
     The transpose is expressed purely in the input ``index_map`` — the
     kernel reads tile (y=j, x=i) while writing tile (i, j), so the reorder
     rides along with the quantization loads (no separate transpose pass).
+
+    ``u`` (optional, stochastic rounding) is the uniform field drawn on the
+    already-transposed shape (X, Y, L) — the layout the reference draws on
+    after its ``swapaxes`` — so its BlockSpec is the identity (output-side)
+    index_map, not the transposing one.
     """
     Y, X, L = x.shape
     block = cfg.block_size
@@ -190,12 +236,22 @@ def quantize_reordered_pallas(x: Array, cfg: QuantConfig,
     nbt = lt // block
     ptile = lt // 2 if pack else lt
     grid = (X, Y, L // lt)
-    kernel = functools.partial(_quant3_kernel, block=block, qmax=cfg.qmax,
-                               pack=pack)
+    if u is None:
+        kernel = functools.partial(_quant3_kernel, block=block, qmax=cfg.qmax,
+                                   pack=pack)
+        in_specs = [pl.BlockSpec((1, 1, lt), lambda i, j, k: (j, i, k))]
+        operands = (x,)
+    else:
+        assert u.shape == (X, Y, L), (u.shape, (X, Y, L))
+        kernel = functools.partial(_quant3_kernel_sr, block=block,
+                                   qmax=cfg.qmax, pack=pack)
+        in_specs = [pl.BlockSpec((1, 1, lt), lambda i, j, k: (j, i, k)),
+                    pl.BlockSpec((1, 1, lt), lambda i, j, k: (i, j, k))]
+        operands = (x, u)
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[pl.BlockSpec((1, 1, lt), lambda i, j, k: (j, i, k))],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, ptile), lambda i, j, k: (i, j, k)),
             pl.BlockSpec((1, 1, nbt), lambda i, j, k: (i, j, k)),
@@ -205,4 +261,4 @@ def quantize_reordered_pallas(x: Array, cfg: QuantConfig,
             jax.ShapeDtypeStruct((X, Y, L // block), jnp.float32),
         ],
         interpret=interpret,
-    )(x)
+    )(*operands)

@@ -261,7 +261,7 @@ def lower_cell(arch_name: str, shape_name: str, multi_pod: bool,
     from repro.train import serve as serve_lib
     from repro.train import state as state_lib
     from repro.train import trainer as trainer_lib
-    from repro.train.policy import make_policy
+    from repro.tune import resolve, serve_ledger, train_ledger
 
     arch = get_config(arch_name)
     shape = SHAPES[shape_name]
@@ -276,7 +276,9 @@ def lower_cell(arch_name: str, shape_name: str, multi_pod: bool,
     if shape.kind != "train" and serve_bits == 4:
         # weight-only INT4 serving (qwZ with 4-bit payload, finer blocks)
         overrides = dict(qwz_bits=4, qwz_block=128)
-    pol = make_policy(arch, axes, variant, **overrides)
+    # the same single owner as train/serve boot (repro.tune.resolve);
+    # mode="off" keeps the preset table so cell configs stay bit-stable
+    pol = resolve(arch, axes, variant, mode="off", overrides=overrides)
     model = Model(arch, pol.zcfg, world=world)
     info: Dict[str, Any] = {
         "skipped": False, "world": world, "axes": axes,
@@ -298,6 +300,22 @@ def lower_cell(arch_name: str, shape_name: str, multi_pod: bool,
         accum = pol.train_accum          # policy default (memory fit)
     accum = max(accum, 1)
     info["accum_used"] = accum
+    # analytic HBM ledger (repro.tune.memory) — charges the (k+1)
+    # prefetch-ring live buffers the old memory model missed; reported
+    # alongside the measured jaxpr peak in analyze()
+    sizes = {a: int(s) for a, s in mesh.shape.items()}
+    if shape.kind == "train":
+        micro_tok = max(
+            shape.global_batch * shape.seq_len // world // accum, 1)
+        led = train_ledger(
+            model, sizes,
+            moments_itemsize=jnp.dtype(pol.moments_dtype).itemsize,
+            tokens_per_device=micro_tok, accum=accum,
+            budget_bytes=HBM_BYTES)
+    else:
+        led = serve_ledger(model, sizes, n_slots=shape.global_batch,
+                           kv_len=shape.seq_len, budget_bytes=HBM_BYTES)
+    info["ledger"] = led.as_dict()
     if shape.kind == "train":
         opt_cfg = AdamWConfig(moments_dtype=pol.moments_dtype)
         ts = trainer_lib.build_train_step(model, mesh, opt_cfg, donate=True,
@@ -405,6 +423,13 @@ def analyze(lowered, info: Dict[str, Any], multi_pod: bool) -> Dict[str, Any]:
     else:
         mem["peak_bytes_per_device"] = mem.get("xla_cpu_peak_upper_bound", 0)
     mem["fits_16gb"] = bool(mem["peak_bytes_per_device"] <= HBM_BYTES)
+    led = info.get("ledger")
+    if led:
+        # the analytic (k+1)-ring-aware bill next to the measured peak
+        mem["ledger_total_bytes"] = int(led["total_bytes"])
+        mem["ledger_fits"] = bool(led["fits"])
+        mem["ledger_ring_bytes"] = int(sum(
+            b for name, b in led["lines"].items() if name.startswith("ring_")))
     info["memory"] = mem
 
     # ---- cost ----------------------------------------------------------
@@ -585,6 +610,10 @@ def main():
           f"active={info['n_active']/1e9:.2f}B world={info['world']}")
     print(f"  memory: peak/dev={m.get('peak_bytes_per_device', 0)/2**30:.2f}"
           f" GiB fits16GB={m.get('fits_16gb')}")
+    if "ledger_total_bytes" in m:
+        print(f"  ledger: total={m['ledger_total_bytes']/2**30:.2f} GiB "
+              f"(ring={m['ledger_ring_bytes']/2**30:.2f} GiB) "
+              f"fits={m['ledger_fits']}")
     print(f"  roofline: compute={r['compute_s']*1e3:.2f}ms "
           f"memory={r['memory_s']*1e3:.2f}ms "
           f"collective={r['collective_s']*1e3:.2f}ms "

@@ -29,10 +29,35 @@ from typing import Any, Dict, Optional, Tuple
 import numpy as np
 
 
+@dataclasses.dataclass
+class Built:
+    """build_everything's result: unpacks like the legacy 6-tuple
+    (``mesh, arch, model, opt_cfg, step, lm = build_everything(...)``)
+    while also carrying the resolved policy for --tune consumers."""
+    mesh: Any
+    arch: Any
+    model: Any
+    opt_cfg: Any
+    step: Any
+    lm: Any
+    policy: Any = None      # Policy (tune=off) or tune.ResolvedPolicy
+
+    def __iter__(self):
+        return iter((self.mesh, self.arch, self.model, self.opt_cfg,
+                     self.step, self.lm))
+
+
 def build_everything(arch_name: str, mesh_shape: Tuple[int, ...],
                      variant: str, reduced: bool, batch: int, seq: int,
-                     lr: float, accum: int = 1, moe_chunks: int = 0):
-    """Construct (mesh, model, train_step, data, specs) for a run."""
+                     lr: float, accum: int = 1, moe_chunks: int = 0,
+                     tune: str = "off", hbm_gb: float = 16.0) -> "Built":
+    """Construct (mesh, model, train_step, data, specs) for a run.
+
+    ``tune``: "off" keeps the static preset table (train/policy.py);
+    "static"/"probe" route through ``repro.tune.resolve`` — the committed
+    profile or a live mesh probe feeding the prefetch/block/hpZ knobs,
+    with the (k+1)-ring HBM ledger charged against ``hbm_gb``.
+    """
     import jax
     import jax.numpy as jnp
     from repro.configs import get_config
@@ -53,14 +78,23 @@ def build_everything(arch_name: str, mesh_shape: Tuple[int, ...],
     if moe_chunks:
         arch = dataclasses.replace(arch, expert_chunks=moe_chunks)
     world = int(np.prod(mesh_shape))
-    pol = make_policy(arch, axes, variant)
+    if tune and tune != "off":
+        from repro.tune import GB, resolve
+        pol = resolve(
+            arch, axes, variant, mode=tune,
+            mesh=mesh if tune == "probe" else None,
+            mesh_sizes=dict(zip(axes, (int(s) for s in mesh_shape))),
+            hbm_budget_bytes=int(hbm_gb * GB),
+            tokens_per_device=max((batch * seq) // world, 1))
+    else:
+        pol = make_policy(arch, axes, variant)
     model = Model(arch, pol.zcfg, world=world)
     opt_cfg = AdamWConfig(lr=warmup_cosine(lr, 10, 10_000),
                           moments_dtype=pol.moments_dtype)
     step = trainer_lib.build_train_step(model, mesh, opt_cfg, accum=accum,
                                         global_batch=batch)
     lm = SyntheticLM(vocab=arch.vocab, seq_len=seq, seed=7)
-    return mesh, arch, model, opt_cfg, step, lm
+    return Built(mesh, arch, model, opt_cfg, step, lm, policy=pol)
 
 
 def save_ckpt(ckpt_dir: str, step_i: int, state, meta: Dict,
@@ -110,9 +144,15 @@ def train_loop(args) -> Dict[str, Any]:
     from repro.train.trainer import place_batch
 
     mesh_shape = tuple(int(x) for x in args.mesh.split("x"))
-    mesh, arch, model, opt_cfg, ts, lm = build_everything(
+    tune = getattr(args, "tune", "off") or "off"
+    built = build_everything(
         args.arch, mesh_shape, args.variant, args.reduced, args.batch,
-        args.seq, args.lr, args.accum)
+        args.seq, args.lr, args.accum, tune=tune,
+        hbm_gb=getattr(args, "hbm_gb", 16.0))
+    mesh, arch, model, opt_cfg, ts, lm = built
+    pol = built.policy
+    if tune != "off":
+        print(f"[tune] {pol.explain()}")
 
     start = 0
     st = None
@@ -134,6 +174,17 @@ def train_loop(args) -> Dict[str, Any]:
     tracer = _setup_telemetry(args)
     trace_steps = int(getattr(args, "trace_steps", 0) or 0)
     reg = get_registry()
+    if telemetry:
+        # record the chosen policy so dashboards can segment runs by knob
+        z = pol.zcfg
+        reg.gauge("tune.prefetch").set(z.prefetch)
+        reg.gauge("tune.qwz").set(int(z.qwz))
+        reg.gauge("tune.hpz").set(int(z.hpz))
+        reg.gauge("tune.qgz").set(int(z.qgz))
+        reg.gauge("tune.qwz_block").set(z.qwz_block)
+        reg.gauge("tune.qgz_block").set(z.qgz_block)
+        reg.gauge("tune.mode").set(
+            {"off": 0, "static": 1, "probe": 2}.get(tune, 0))
     comm = None   # {label: per-device bytes/step}, filled on first step
     for i in range(start, args.steps):
         if args.simulate_failure_at is not None \
@@ -188,11 +239,15 @@ def train_loop(args) -> Dict[str, Any]:
         gate_report = runtime_gate(
             measured=comm or {}, projected=projected,
             strict=bool(getattr(args, "obs_gate", False)))
+        policy_dict = (pol.as_dict() if hasattr(pol, "as_dict")
+                       else {"mode": "off", "prefetch": pol.zcfg.prefetch,
+                             "note": pol.note})
         export_snapshot(
             os.path.join(args.metrics_dir, "BENCH_runtime.json"),
             extra={"gate": gate_report,
+                   "policy": policy_dict,
                    "config": {"arch": arch.name, "variant": args.variant,
-                              "mesh": list(mesh_shape),
+                              "mesh": list(mesh_shape), "tune": tune,
                               "steps": args.steps, "batch": args.batch,
                               "seq": args.seq, "accum": args.accum}})
         tracer.close()
@@ -321,6 +376,15 @@ def main():
                     help="assert the measured-vs-projected comm gate "
                          "(1%% per collective label) instead of only "
                          "reporting it")
+    ap.add_argument("--tune", default="off",
+                    choices=["off", "static", "probe"],
+                    help="policy resolution (repro.tune): off = static "
+                         "preset table; static = committed probe profile "
+                         "(deterministic, CI); probe = time real "
+                         "collectives on the live mesh at boot")
+    ap.add_argument("--hbm-gb", type=float, default=16.0,
+                    help="per-device HBM budget the tune ledger charges "
+                         "the (k+1) ring buffers against")
     ap.add_argument("--kernel-backend", default=None,
                     choices=["pallas", "interpret", "xla", "ref"],
                     help="quant-kernel backend (kernels/ops.py); default "

@@ -85,8 +85,29 @@ class ServeEngine:
                  cache_dtype=None, donate: bool = True,
                  prefetch: Optional[int] = None,
                  kernel_backend: Optional[str] = None,
+                 tune: str = "off", hbm_gb: float = 16.0,
                  clock: Callable[[], float] = time.monotonic):
         cfg = model.cfg
+        self.policy = None
+        if tune and tune != "off":
+            # boot through the same resolver as training (repro.tune):
+            # serve workload — the ledger charges the KV pool and the
+            # forward-only ring; explicit prefetch/kernel_backend args
+            # still win over the resolved defaults
+            from repro.tune import GB, resolve
+            mesh_axes = tuple(mesh.axis_names)
+            rp = resolve(
+                cfg, mesh_axes, "zeropp", mode=tune,
+                mesh=mesh if tune == "probe" else None,
+                mesh_sizes=dict(zip(mesh_axes,
+                                    (int(s) for s in mesh.devices.shape))),
+                hbm_budget_bytes=int(hbm_gb * GB),
+                workload="serve", n_slots=n_slots, kv_len=kv_len)
+            self.policy = rp
+            if prefetch is None:
+                prefetch = rp.zcfg.prefetch
+            if kernel_backend is None:
+                kernel_backend = rp.kernel_backend
         if kernel_backend is not None:
             # pin the quant-kernel backend (pallas/interpret/xla) for every
             # step this engine compiles — validated eagerly, so a 'pallas'
@@ -351,6 +372,7 @@ class ServeEngine:
             "tok_latency_ms": {"p50": self._tok_lat.percentile(50),
                                "p99": self._tok_lat.percentile(99)},
             "tok_per_s": (toks / secs) if secs > 0 else None,
+            "policy": self.policy.as_dict() if self.policy else None,
         }
 
     def run(self, max_steps: Optional[int] = None) -> Dict[int, List[int]]:

@@ -1639,3 +1639,106 @@ def check_obs_runtime_gate():
         set_registry(old_reg)
         set_tracer(old_tr)
         tracer.close()
+
+
+# ---------------------------------------------------------------------------
+# tuner (repro/tune): (k+1) HBM ledger vs the live schedule, boot path
+# (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+def _scan_carry_ring_depths(jaxpr, width, out=None, seen=None):
+    """Max leading dim per dtype over scan CARRY avals shaped (d, width)
+    reachable from ``jaxpr`` (recursive) — the prefetch rings.
+
+    The forward ring rides the scan carry as a stacked (k, P) buffer (P =
+    padded per-layer flat size); xs/consts never have that shape, so the
+    (d, width) carry filter isolates the rings exactly.
+    """
+    from repro.launch.jaxpr_analysis import _sub_jaxprs
+    out = {} if out is None else out
+    seen = set() if seen is None else seen
+    if id(jaxpr) in seen:
+        return out
+    seen.add(id(jaxpr))
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "scan":
+            nc = eqn.params["num_consts"]
+            ncar = eqn.params["num_carry"]
+            for v in eqn.invars[nc:nc + ncar]:
+                a = v.aval
+                if getattr(a, "ndim", 0) == 2 and a.shape[1] == width:
+                    key = str(a.dtype)
+                    out[key] = max(out.get(key, 0), int(a.shape[0]))
+        for sub, _ in _sub_jaxprs(eqn):
+            _scan_carry_ring_depths(sub, width, out, seen)
+    return out
+
+
+def check_tune_ledger_live_buffers():
+    """ISSUE 9 acceptance: the ledger's (k+1) ring charge must match the
+    MEASURED live gathered-buffer count of the traced train step for
+    prefetch 0..3 — counted from the scan carries, not assumed.
+
+    measured = (bf16 (k, P) carry ring leading dim) + 1: k slots ride the
+    carry and ``_ring_read`` materializes one more copy for the consuming
+    layer; prefetch=0 has no ring carry but still computes with a single
+    gathered buffer.  The backward pass carries a second, fp32 (k, P)
+    ring of unreduced gradients — its depth must match ring_grads_bwd.
+    """
+    from repro.train import trainer as trainer_lib
+    from repro.tune import train_ledger
+
+    for pf in (0, 1, 2, 3):
+        # 6 layers so effective_prefetch(n_periods) == pf for every depth
+        mesh, arch, model, opt_cfg, ts, lm = _prefetch_env(pf, n_layers=6)
+        k_eff = model.zcfg.effective_prefetch(model.n_periods)
+        assert k_eff == pf, (k_eff, pf, model.n_periods)
+
+        p_sh, o_sh = trainer_lib.state_shapes(model, opt_cfg)
+        params = _abstract_tree(p_sh, mesh, ts.in_specs[0])
+        opt = _abstract_tree(o_sh, mesh, ts.in_specs[1])
+        bsh = {"tokens": jax.ShapeDtypeStruct((16, 64), jnp.int32),
+               "targets": jax.ShapeDtypeStruct((16, 64), jnp.int32)}
+        batch = _abstract_tree(bsh, mesh, ts.in_specs[2])
+        cj = jax.make_jaxpr(ts.fn)(params, opt, batch)
+
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        led = train_ledger(model, sizes)
+        ring = dict(led.ring_buffers)
+        assert ring["layers"] == pf + 1, (pf, ring)
+
+        P = model.period_spec.padded_size
+        depths = _scan_carry_ring_depths(cj.jaxpr, P)
+        measured_w = depths.get("bfloat16", 0) + 1   # slots + read copy
+        assert measured_w == ring["layers"], (pf, depths, ring)
+        measured_g = depths.get("float32", 0)        # bwd unreduced grads
+        assert measured_g == pf, (pf, depths)
+        assert led.line("ring_grads_bwd") == pf * 2 * P, led.as_dict()
+
+
+def check_tune_static_resolve_boot():
+    """--tune=static boots through repro.tune end to end on a live mesh:
+    build_everything carries the frozen ResolvedPolicy, the boot-path
+    resolution equals a direct ``resolve`` call with the same inputs
+    (deterministic by the committed-profile contract), the ledger's ring
+    count honors the policy's own effective depth, and the tuned step
+    trains to finite loss."""
+    from repro.launch.train import build_everything
+    from repro.tune import GB, resolve
+
+    built = build_everything("gpt-350m", (4, 2), "zeropp", reduced=True,
+                             batch=16, seq=64, lr=3e-3, tune="static",
+                             hbm_gb=16.0)
+    pol = built.policy
+    assert pol is not None and pol.mode == "static", pol
+    assert pol.ledger is not None and pol.ledger.fits, pol.ledger.as_dict()
+    again = resolve(built.arch, ("data", "model"), "zeropp", mode="static",
+                    mesh_sizes={"data": 4, "model": 2},
+                    hbm_budget_bytes=16 * GB,
+                    tokens_per_device=16 * 64 // 8)
+    assert pol == again, (pol, again)
+    k_eff = pol.zcfg.effective_prefetch(built.model.n_periods)
+    assert dict(pol.ledger.ring_buffers)["layers"] == k_eff + 1
+    mesh, arch, model, opt_cfg, ts, lm = built
+    _, _, losses = _run_steps(mesh, arch, model, opt_cfg, ts, lm, 2, 16)
+    assert np.isfinite(losses).all(), losses

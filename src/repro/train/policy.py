@@ -1,8 +1,11 @@
-"""Per-(architecture × mesh) ZeRO++ policy: how the paper's knobs are set.
+"""Per-(architecture × mesh) ZeRO++ policy — thin preset over repro.tune.
 
-The paper exposes qwZ / hpZ / qgZ plus the secondary group size as
-configuration; this module is the production decision table mapping an
-architecture and mesh onto those knobs under a v5e 16 GB HBM budget:
+The decision logic lives in ``repro.tune.resolve`` (the single owner of
+ZeRO++ configuration resolution, DESIGN.md §9); :func:`make_policy` is the
+static-preset entry point every existing caller keeps: it runs the
+resolver in ``mode="off"`` — the deterministic preset table, no mesh
+probe, no ledger feedback — and wraps the result in the legacy
+:class:`Policy` record.  The preset rules themselves are unchanged:
 
   * small/medium models (< LARGE_PARAMS): full ZeRO++ with the secondary
     partition on the fast ``model`` axis (the paper's per-node group) and
@@ -15,30 +18,28 @@ architecture and mesh onto those knobs under a v5e 16 GB HBM budget:
     weight traffic in the backward pass at 2·M/256 per-device cost.  On the
     single-pod mesh hpZ is off (there is no slower tier to save).  Adam
     moments are stored bf16 (update math stays fp32).
+
+For measurement-driven resolution (``--tune=static|probe``) call
+``repro.tune.resolve`` directly — it returns a :class:`ResolvedPolicy`
+with the same fields plus the probe profile, HBM ledger and a
+human-readable ``explain()``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core.zeropp import ZeroConfig
+from repro.tune.resolve import LARGE_PARAMS, count_params, resolve
 
-LARGE_PARAMS = 32e9
-
-
-def count_params(arch: ArchConfig) -> int:
-    """Analytic parameter count (no Model construction needed)."""
-    from repro.models.model import Model
-    m = Model(arch, ZeroConfig.local(), world=1)
-    return m.n_params()
+__all__ = ["LARGE_PARAMS", "Policy", "count_params", "make_policy"]
 
 
 @dataclasses.dataclass(frozen=True)
 class Policy:
-    zcfg: ZeroConfig
+    zcfg: "ZeroConfig"  # noqa: F821 — repro.core.zeropp.ZeroConfig
     moments_dtype: jnp.dtype
     n_params: int
     note: str
@@ -54,47 +55,11 @@ def make_policy(
     """Resolve the ZeRO++ configuration for an (arch, mesh) cell.
 
     ``variant`` selects the paper's ablations: "baseline" is plain ZeRO-3;
-    "qwz"/"hpz"/"qgz" enable exactly one technique (Fig. 13).
+    "qwz"/"hpz"/"qgz" enable exactly one technique (Fig. 13).  Explicit
+    keyword overrides win (ablations, tests).
     """
-    n = count_params(arch)
-    large = n >= LARGE_PARAMS
-    multi_pod = "pod" in mesh_axes
-
-    on = dict(qwz=variant in ("zeropp", "qwz"),
-              hpz=variant in ("zeropp", "hpz"),
-              qgz=variant in ("zeropp", "qgz"))
-
-    hpz_axes: Optional[Tuple[str, ...]] = None
-    note = ""
-    if on["hpz"] and large:
-        if multi_pod:
-            hpz_axes = ("data", "model")   # secondary group = one pod
-            note = (f"{n/1e9:.0f}B params: node-sized secondary copy "
-                    f"(2M/16) exceeds 16 GB HBM; secondary group widened to "
-                    f"one pod (2M/256) — kills cross-pod weight traffic")
-        else:
-            on["hpz"] = False
-            note = (f"{n/1e9:.0f}B params on single-pod mesh: hpZ off "
-                    f"(no slower tier to trade memory against; paper's "
-                    f"Table 4 shows the same memory wall for MiCS)")
-
-    kw = dict(
-        qwz=on["qwz"], hpz=on["hpz"], qgz=on["qgz"],
-        hpz_axes=hpz_axes,
-        dp_axes=tuple(mesh_axes),
-        intra_axis="model",
-    )
-    kw.update(overrides)   # explicit overrides win (ablations, tests)
-    zcfg = ZeroConfig(**kw)
-    moments = jnp.bfloat16 if large else jnp.float32
-    # microbatching keeps the >=70B-ACTIVE train cells inside v5e's 16 GB
-    # (activation residuals scale with tokens/device x d_model).  Keyed on
-    # ACTIVE params: a 235B MoE with 22B active has dense-4B-scale
-    # activations and fits at accum=1 — and accum multiplies weight-gather
-    # volume, so never use more than memory requires (§Perf cell C:
-    # accum=4 cost 4.1x collective time for the same math).
-    from repro.models.model import Model as _M
-    n_active = _M(arch, zcfg, world=1).n_active_params()
-    accum = 2 if n_active >= 70e9 else 1
-    return Policy(zcfg=zcfg, moments_dtype=moments, n_params=n, note=note,
-                  train_accum=accum)
+    rp = resolve(arch, tuple(mesh_axes), variant, mode="off",
+                 overrides=overrides)
+    return Policy(zcfg=rp.zcfg, moments_dtype=rp.moments_dtype,
+                  n_params=rp.n_params, note=rp.note,
+                  train_accum=rp.train_accum)

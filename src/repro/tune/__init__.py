@@ -1,0 +1,22 @@
+"""Boot-time self-tuning comm policy (DESIGN.md §9).
+
+One owner for every ZeRO++ knob: probe the live mesh
+(:mod:`repro.tune.probe`), charge HBM honestly — including the (k+1)
+prefetch-ring buffers (:mod:`repro.tune.memory`) — and resolve the
+configuration through a single deterministic decision list
+(:mod:`repro.tune.resolve`).
+"""
+from repro.tune.memory import (GB, HBM_BYTES, HBMLedger, LedgerLine,
+                               ring_lines, serve_ledger, train_ledger)
+from repro.tune.probe import (STATIC_PROFILE_PATH, ProbeProfile, TierProfile,
+                              probe_mesh, static_profile)
+from repro.tune.resolve import (LARGE_PARAMS, MODES, ResolvedPolicy,
+                                count_params, resolve)
+
+__all__ = [
+    "GB", "HBM_BYTES", "HBMLedger", "LedgerLine", "ring_lines",
+    "serve_ledger", "train_ledger",
+    "STATIC_PROFILE_PATH", "ProbeProfile", "TierProfile", "probe_mesh",
+    "static_profile",
+    "LARGE_PARAMS", "MODES", "ResolvedPolicy", "count_params", "resolve",
+]

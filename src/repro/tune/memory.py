@@ -1,0 +1,236 @@
+"""HBM ledger: charge every persistent byte a policy implies, honestly.
+
+The long-standing gap this closes: the depth-k prefetch ring of
+``core/schedule.py`` keeps a ring of ``k`` gathered weight buffers in the
+scan carry AND materializes one more copy at the read (``_ring_read``
+returns a dynamic-index copy of the consumed slot), so a depth-k schedule
+holds **k+1** live gathered buffers per scan — while the old analytic
+memory model (``benchmarks/memory_model.py``) charged zero ring bytes and
+``launch/dryrun.py`` only reported whatever the jaxpr walk happened to
+see.  The resolver trades ring depth against this ledger's headroom
+instead of OOMing at boot.
+
+Line items (per device):
+
+  master_params      fp32 master shard — IS the parameter buffer (4 B/param)
+  adam_moments       two Adam moment shards (fp32: 8 B, bf16: 4 B /param)
+  grad_shards        fp32 reduced-gradient shard live at the update
+  hpz_secondary      bf16 secondary copy per hpZ group (2·M / |secondary|)
+  ring_weights_*     (k+1) live gathered buffers per ring'd scan  <-- the gap
+  ring_grads_bwd     backward's k-slot unreduced-gradient ring
+  gathered_transient largest single-shot gathered buffer (embed/rem/unemb)
+  activations        residual-stream saves under remat (coarse, documented)
+  kv_pool            serve: the engine's paged KV slabs
+  params_bf16        serve: the inference weight shard
+
+Everything is analytic (no tracing, no devices) so the resolver can sweep
+depths in microseconds; ``tests/test_tune.py`` pins the ring charge to a
+hand-counted oracle and ``testing/checks.py`` cross-checks the buffer
+counts against the live scan carries for prefetch 0..3.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+GB = 1 << 30
+# v5e per-chip HBM — the default budget; keep in sync with
+# launch/dryrun.py's hardware model.
+HBM_BYTES = 16 * GB
+
+_COMPUTE_BYTES = 2   # gathered weights / grads ride in bf16 (compute dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class LedgerLine:
+    name: str
+    bytes: int
+    detail: str
+
+
+@dataclasses.dataclass(frozen=True)
+class HBMLedger:
+    """An itemized per-device HBM bill against a budget."""
+
+    lines: Tuple[LedgerLine, ...]
+    budget_bytes: int
+    # (scan name, live gathered-buffer count) — the (k+1) contract; the
+    # live-buffer regression check compares these against the traced scan
+    # carries, not just the byte totals.
+    ring_buffers: Tuple[Tuple[str, int], ...] = ()
+
+    @property
+    def total(self) -> int:
+        return sum(l.bytes for l in self.lines)
+
+    @property
+    def headroom(self) -> int:
+        return self.budget_bytes - self.total
+
+    @property
+    def fits(self) -> bool:
+        return self.total <= self.budget_bytes
+
+    def line(self, name: str) -> int:
+        for l in self.lines:
+            if l.name == name:
+                return l.bytes
+        return 0
+
+    def explain(self) -> str:
+        out = ["HBM ledger (per device):"]
+        for l in self.lines:
+            out.append(f"  {l.name:<20s} {l.bytes / GB:7.3f} GiB  {l.detail}")
+        verdict = "fits" if self.fits else "OVER BUDGET"
+        out.append(f"  {'total':<20s} {self.total / GB:7.3f} GiB  "
+                   f"of {self.budget_bytes / GB:.1f} GiB budget -> {verdict} "
+                   f"(headroom {self.headroom / GB:+.3f} GiB)")
+        return "\n".join(out)
+
+    def as_dict(self) -> Dict:
+        return {
+            "budget_bytes": self.budget_bytes,
+            "total_bytes": self.total,
+            "headroom_bytes": self.headroom,
+            "fits": self.fits,
+            "ring_buffers": dict(self.ring_buffers),
+            "lines": {l.name: l.bytes for l in self.lines},
+        }
+
+
+def _group_size(mesh_sizes: Mapping[str, int], axes: Sequence[str]) -> int:
+    g = 1
+    for a in axes:
+        g *= int(mesh_sizes.get(a, 1))
+    return g
+
+
+def ring_lines(model) -> Tuple[List[LedgerLine], List[Tuple[str, int]]]:
+    """The prefetch-ring charge: (k+1) live gathered buffers per scan.
+
+    k ring slots live in the scan carry plus the one copy ``_ring_read``
+    materializes for the consuming layer; prefetch=0 (synchronous) still
+    holds the single gathered buffer it is computing with.  Backward adds
+    a k-slot ring of unreduced per-layer gradients (compute dtype) on top
+    of its own weight ring — charged separately so ``explain`` shows which
+    phase owns the bytes.
+    """
+    z = model.zcfg
+    lines: List[LedgerLine] = []
+    rings: List[Tuple[str, int]] = []
+
+    k = z.effective_prefetch(model.n_periods)
+    P = model.period_spec.padded_size
+    lines.append(LedgerLine(
+        "ring_weights_layers", (k + 1) * _COMPUTE_BYTES * P,
+        f"(k+1)={k + 1} live gathered layer buffers x {P:,} params bf16 "
+        f"(k={k} ring slots + 1 read copy; layer scan)"))
+    rings.append(("layers", k + 1))
+    if k:
+        lines.append(LedgerLine(
+            "ring_grads_bwd", k * _COMPUTE_BYTES * P,
+            f"backward k={k} unreduced per-layer gradient slots x "
+            f"{P:,} params bf16"))
+
+    if model.is_moe:
+        kc = z.effective_prefetch(model.cfg.expert_chunks)
+        E = model.expert_spec.padded_size
+        lines.append(LedgerLine(
+            "ring_weights_experts", (kc + 1) * _COMPUTE_BYTES * E,
+            f"(k+1)={kc + 1} live gathered expert-chunk buffers x "
+            f"{E:,} params bf16 (nested chunk scan)"))
+        rings.append(("expert_chunks", kc + 1))
+        if kc:
+            lines.append(LedgerLine(
+                "ring_grads_experts_bwd", kc * _COMPUTE_BYTES * E,
+                f"backward kc={kc} unreduced expert-chunk gradient slots"))
+    return lines, rings
+
+
+def _transient_line(model) -> LedgerLine:
+    """Largest single-shot (un-ring'd) gathered buffer."""
+    singles = {"unemb_chunk": model.unemb_spec.padded_size,
+               "head": model.head_spec.padded_size}
+    if model.embed_spec is not None:
+        singles["embed"] = model.embed_spec.padded_size
+    if model.rem_spec is not None:
+        singles["rem"] = model.rem_spec.padded_size
+    worst = max(singles, key=lambda k: singles[k])
+    return LedgerLine(
+        "gathered_transient", _COMPUTE_BYTES * singles[worst],
+        f"largest one-shot gathered buffer = {worst} "
+        f"({singles[worst]:,} params bf16)")
+
+
+def train_ledger(model, mesh_sizes: Mapping[str, int],
+                 moments_itemsize: int = 4,
+                 tokens_per_device: int = 2048,
+                 accum: int = 1,
+                 budget_bytes: int = HBM_BYTES) -> HBMLedger:
+    """Per-device training HBM bill for ``model`` on a mesh of
+    ``mesh_sizes`` ({axis: size}).
+
+    ``moments_itemsize`` is the per-moment element size (4 = fp32, 2 =
+    bf16); ``tokens_per_device`` the MICRObatch tokens one device holds
+    activations for (already divided by ``accum``).
+    """
+    z = model.zcfg
+    world = _group_size(mesh_sizes, mesh_sizes.keys())
+    N = model.n_params()
+    lines: List[LedgerLine] = [
+        LedgerLine("master_params", 4 * N // world,
+                   f"fp32 master shard: 4 B x {N / 1e9:.2f}B params "
+                   f"/ {world} devices"),
+        LedgerLine("adam_moments", 2 * moments_itemsize * N // world,
+                   f"2 moment shards x {moments_itemsize} B/param"),
+        LedgerLine("grad_shards", 4 * N // world,
+                   "fp32 reduced-gradient shard live at the optimizer "
+                   "update"),
+    ]
+    if z.hpz:
+        sec = _group_size(mesh_sizes, z.secondary_axes)
+        lines.append(LedgerLine(
+            "hpz_secondary", _COMPUTE_BYTES * N // max(sec, 1),
+            f"bf16 secondary copy over {z.secondary_axes} "
+            f"(group size {sec})"))
+    rlines, rings = ring_lines(model)
+    lines += rlines
+    lines.append(_transient_line(model))
+    d = model.cfg.d_model
+    layers = model.cfg.n_layers
+    act = _COMPUTE_BYTES * tokens_per_device * d * (layers + 2)
+    lines.append(LedgerLine(
+        "activations", act,
+        f"residual-stream saves under remat: {tokens_per_device} tok x "
+        f"d_model {d} x ({layers}+2) layers bf16 x accum=1 microbatch "
+        f"(accum={accum} shrinks tokens, not this term)"))
+    return HBMLedger(tuple(lines), budget_bytes, tuple(rings))
+
+
+def serve_ledger(model, mesh_sizes: Mapping[str, int],
+                 n_slots: int, kv_len: int,
+                 cache_itemsize: int = 2,
+                 budget_bytes: int = HBM_BYTES) -> HBMLedger:
+    """Per-device serving HBM bill: bf16 weight shard + KV pool + rings."""
+    import numpy as np
+
+    world = _group_size(mesh_sizes, mesh_sizes.keys())
+    N = model.n_params()
+    lines: List[LedgerLine] = [
+        LedgerLine("params_bf16", _COMPUTE_BYTES * N // world,
+                   f"bf16 inference weight shard / {world} devices"),
+    ]
+    import jax
+    kv = model.cache_shapes(n_slots, kv_len)
+    kv_bytes = sum(int(np.prod(l.shape)) * cache_itemsize
+                   for l in jax.tree.leaves(kv))
+    lines.append(LedgerLine(
+        "kv_pool", kv_bytes // world,
+        f"{n_slots} slots x {kv_len} positions KV / {world} devices"))
+    rlines, rings = ring_lines(model)
+    # inference scans ring the forward gathers only — no backward grads
+    rlines = [l for l in rlines if "grads" not in l.name]
+    rings = list(rings)
+    lines += rlines
+    lines.append(_transient_line(model))
+    return HBMLedger(tuple(lines), budget_bytes, tuple(rings))

@@ -329,24 +329,38 @@ def test_flash_ops_shares_platform_probe(monkeypatch):
 # ---------------------------------------------------------------------------
 
 def test_stochastic_dispatch_determinism():
-    """cfg.stochastic routes every backend to the xla reference (the
-    kernels don't thread PRNG keys): fixed key -> identical payloads on
-    every backend; different key -> different rounding."""
+    """Stochastic rounding now THREADS the PRNG key through the kernel
+    path: the uniform field is drawn outside the pallas_call (exactly as
+    the reference draws it) and compared inside the kernel, so a fixed
+    key gives bit-identical payloads on every backend — with the
+    interpret backend actually running the kernel, not the xla ref."""
     from repro.kernels import ops
+    from repro.obs.metrics import get_registry
     cfg = QuantConfig(bits=4, block_size=128, stochastic=True)
     x = _rand((4, 512), jnp.float32, seed=21)
     k1, k2 = jax.random.split(jax.random.PRNGKey(0))
     outs = {}
     for be in ("xla", "interpret"):
         with ops.use_backend(be):
-            outs[be] = ops.quantize_blockwise(x, cfg, k1)
+            before = get_registry().counter(
+                f"kernels.dispatch.quantize_blockwise.{be}").value
+            # jit both backends: eager vs traced XLA differ by 1 ulp in
+            # the scale division (see _jit's note), which is not what
+            # this test is about
+            outs[be] = jax.jit(
+                lambda a, k: ops.quantize_blockwise(a, cfg, k))(x, k1)
+            after = get_registry().counter(
+                f"kernels.dispatch.quantize_blockwise.{be}").value
+            assert after == before + 1, (be, before, after)
     np.testing.assert_array_equal(np.asarray(outs["xla"][0]),
                                   np.asarray(outs["interpret"][0]))
     np.testing.assert_array_equal(np.asarray(outs["xla"][1]),
                                   np.asarray(outs["interpret"][1]))
     with ops.use_backend("interpret"):
-        again = ops.quantize_blockwise(x, cfg, k1)
-        other = ops.quantize_blockwise(x, cfg, k2)
+        again = jax.jit(
+            lambda a, k: ops.quantize_blockwise(a, cfg, k))(x, k1)
+        other = jax.jit(
+            lambda a, k: ops.quantize_blockwise(a, cfg, k))(x, k2)
     np.testing.assert_array_equal(np.asarray(outs["interpret"][0]),
                                   np.asarray(again[0]))
     assert not np.array_equal(np.asarray(again[0]), np.asarray(other[0]))

@@ -1,0 +1,222 @@
+"""Tuner subsystem tests (repro/tune): resolver determinism, the
+HBM-budget monotonicity contract, static-probe profile round-trips, and
+the (k+1) prefetch-ring ledger against a hand-counted oracle.
+
+Live-mesh behaviour (ledger ring counts vs traced scan carries, the
+8-device probe) runs in subprocesses via testing/subproc.py from
+testing/checks.py; everything here is single-device analytic.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core.zeropp import ZeroConfig
+from repro.models.model import Model
+from repro.testing.subproc import run_checks
+from repro.tune import (GB, ProbeProfile, TierProfile, resolve,
+                        static_profile, train_ledger)
+from repro.tune.memory import ring_lines
+
+AXES2 = ("data", "model")
+AXES3 = ("pod", "data", "model")
+
+
+def _arch():
+    return get_config("gpt-350m").reduced()
+
+
+# ---------------------------------------------------------------------------
+# resolver determinism
+# ---------------------------------------------------------------------------
+
+def test_resolve_deterministic_under_static_profile():
+    """Same inputs -> the same frozen policy, field for field (the static
+    profile is committed, so CI resolution is reproducible by contract)."""
+    arch = _arch()
+    kw = dict(mode="static", mesh_sizes={"data": 4, "model": 2},
+              hbm_budget_bytes=16 * GB, tokens_per_device=128)
+    a = resolve(arch, AXES2, "zeropp", **kw)
+    b = resolve(arch, AXES2, "zeropp", **kw)
+    assert a == b                       # frozen dataclass equality
+    assert a.zcfg == b.zcfg
+    assert a.decisions == b.decisions
+    assert a.ledger.as_dict() == b.ledger.as_dict()
+
+
+def test_resolve_off_matches_make_policy():
+    """mode='off' is exactly the preset table make_policy wraps."""
+    from repro.train.policy import make_policy
+    arch = _arch()
+    for variant in ("zeropp", "baseline", "qwz", "hpz", "qgz"):
+        for axes in (AXES2, AXES3):
+            rp = resolve(arch, axes, variant, mode="off")
+            pol = make_policy(arch, axes, variant)
+            assert rp.zcfg == pol.zcfg, (variant, axes)
+            assert rp.moments_dtype == pol.moments_dtype
+            assert rp.n_params == pol.n_params
+            assert rp.note == pol.note
+            assert rp.train_accum == pol.train_accum
+
+
+def test_resolve_overrides_win():
+    rp = resolve(_arch(), AXES2, "zeropp", mode="static",
+                 mesh_sizes={"data": 4, "model": 2},
+                 overrides={"prefetch": 3, "qwz_block": 512})
+    assert rp.zcfg.prefetch == 3        # pinned, no ledger walk-down
+    assert rp.zcfg.qwz_block == 512
+    assert any("overrides" in d for d in rp.decisions)
+
+
+# ---------------------------------------------------------------------------
+# budget monotonicity: tighter HBM never RAISES prefetch
+# ---------------------------------------------------------------------------
+
+def test_prefetch_monotone_in_budget():
+    arch = _arch()
+    sizes = {"data": 4, "model": 2}
+    depths = []
+    for budget_gb in (32, 16, 8, 2, 1):
+        rp = resolve(arch, AXES2, "zeropp", mode="static", mesh_sizes=sizes,
+                     hbm_budget_bytes=budget_gb * GB,
+                     tokens_per_device=2048)
+        depths.append(rp.zcfg.prefetch)
+    assert depths == sorted(depths, reverse=True), depths
+    # and the chosen depth's ledger must fit whenever any depth fits
+    rp = resolve(arch, AXES2, "zeropp", mode="static", mesh_sizes=sizes,
+                 hbm_budget_bytes=32 * GB)
+    assert rp.ledger.fits
+
+
+def test_ledger_walkdown_hits_zero_on_tiny_budget():
+    """A budget smaller than the state itself walks depth to 0 and says so."""
+    rp = resolve(_arch(), AXES2, "zeropp", mode="static",
+                 mesh_sizes={"data": 4, "model": 2},
+                 hbm_budget_bytes=1 << 20)   # 1 MiB: nothing fits
+    assert rp.zcfg.prefetch == 0
+    assert not rp.ledger.fits
+    assert any("walk-down" in d for d in rp.decisions)
+
+
+# ---------------------------------------------------------------------------
+# static probe profile round-trip
+# ---------------------------------------------------------------------------
+
+def test_static_profile_roundtrip(tmp_path):
+    prof = static_profile(AXES3, (2, 16, 16))
+    assert prof.source == "static"
+    p = tmp_path / "prof.json"
+    prof.save(str(p))
+    back = ProbeProfile.load(str(p))
+    assert back == prof
+    assert back.fast_bw("model") == prof.fast_bw("model")
+    assert back.slow_bw(("pod",)) == prof.slow_bw(("pod",))
+
+
+def test_profile_for_mesh_rekeys_axes():
+    """A 3-axis profile re-keyed onto a 2-axis mesh: known axes keep their
+    tiers, size-1 axes become free, unknown axes fall back to 'data'."""
+    prof = static_profile(AXES3, (2, 16, 16))
+    two = prof.for_mesh(AXES2, (16, 16))
+    assert set(two.tiers) == {"data", "model"}
+    assert two.tiers["model"] == prof.tiers["model"]
+    assert two.tiers["data"] == prof.tiers["data"]
+
+
+# ---------------------------------------------------------------------------
+# (k+1) ring ledger vs hand-counted oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [0, 1, 2, 3])
+def test_ring_ledger_matches_hand_count(k):
+    """Hand-counted live-buffer oracle for a dense model:
+
+      forward/backward weight ring: (k_eff + 1) buffers of the padded
+      per-layer flat size, bf16;
+      backward gradient ring: k_eff more such buffers.
+
+    k_eff = min(k, n_periods - 1) — a deeper ring would lap itself.
+    """
+    arch = _arch()
+    z = ZeroConfig(dp_axes=AXES2, prefetch=k)
+    model = Model(arch, z, world=8)
+    lines, rings = ring_lines(model)
+    by_name = {l.name: l.bytes for l in lines}
+
+    k_eff = min(k, model.n_periods - 1)
+    P = model.period_spec.padded_size
+    assert by_name["ring_weights_layers"] == (k_eff + 1) * 2 * P
+    assert by_name.get("ring_grads_bwd", 0) == k_eff * 2 * P
+    assert dict(rings)["layers"] == k_eff + 1
+
+
+def test_train_ledger_charges_every_line():
+    arch = _arch()
+    sizes = {"data": 4, "model": 2}
+    z = ZeroConfig(dp_axes=AXES2, hpz=True, hpz_axes=("model",), prefetch=1)
+    model = Model(arch, z, world=8)
+    led = train_ledger(model, sizes, moments_itemsize=4,
+                       tokens_per_device=128, budget_bytes=16 * GB)
+    N = model.n_params()
+    assert led.line("master_params") == 4 * N // 8
+    assert led.line("adam_moments") == 8 * N // 8
+    assert led.line("grad_shards") == 4 * N // 8
+    assert led.line("hpz_secondary") == 2 * N // 2   # |('model',)| = 2
+    assert led.line("ring_weights_layers") > 0
+    assert led.line("activations") > 0
+    assert led.total == sum(l.bytes for l in led.lines)
+    assert led.fits and led.headroom == 16 * GB - led.total
+
+
+def test_moe_ledger_has_expert_ring():
+    """MoE models ring the nested expert-chunk scan too."""
+    arch = get_config("deepseek-moe-16b").reduced()
+    if arch.n_experts == 0:
+        pytest.skip("config reduced away MoE")
+    z = ZeroConfig(dp_axes=AXES2, prefetch=2)
+    model = Model(arch, z, world=8)
+    lines, rings = ring_lines(model)
+    names = {l.name for l in lines}
+    assert "ring_weights_experts" in names
+    assert "expert_chunks" in dict(rings)
+    kc = z.effective_prefetch(arch.expert_chunks)
+    E = model.expert_spec.padded_size
+    by_name = {l.name: l.bytes for l in lines}
+    assert by_name["ring_weights_experts"] == (kc + 1) * 2 * E
+
+
+# ---------------------------------------------------------------------------
+# probe fitting (no devices: feed synthetic timings through _fit)
+# ---------------------------------------------------------------------------
+
+def test_fit_recovers_alpha_beta():
+    from repro.tune.probe import _fit
+    bw, alpha = 50e9, 20e-6
+    pts = [(b, alpha + b / bw) for b in (1 << 13, 1 << 15, 1 << 17)]
+    lat, bps = _fit(pts)
+    assert abs(bps - bw) / bw < 1e-6
+    assert abs(lat - alpha) < 1e-9
+
+
+def test_fit_clamps_degenerate_inputs():
+    from repro.tune.probe import _fit, _MAX_BW, _MIN_BW
+    # all-identical byte sizes: slope undefined -> clamped, latency >= 0
+    lat, bps = _fit([(4096, 1e-5), (4096, 1e-5), (4096, 1e-5)])
+    assert _MIN_BW <= bps <= _MAX_BW
+    assert lat >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# multi-device: ledger vs traced scan carries, --tune=static boot path
+# (subprocess; see testing/subproc.py)
+# ---------------------------------------------------------------------------
+
+def test_tune_ledger_live_buffers():
+    """ISSUE 9 acceptance: (k+1) ledger == measured live gathered-buffer
+    counts in the traced train step for prefetch 0..3."""
+    run_checks(["check_tune_ledger_live_buffers"], n_devices=8, timeout=900)
+
+
+def test_tune_static_resolve_boot():
+    run_checks(["check_tune_static_resolve_boot"], n_devices=8, timeout=900)
