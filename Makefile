@@ -8,8 +8,9 @@ PY       ?= python
 MP8       = XLA_FLAGS=--xla_force_host_platform_device_count=8
 PYPATH    = PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH}
 
-.PHONY: test test-fast bench-smoke bench ckpt-smoke serve-smoke moe-smoke \
-        ring-smoke fault-smoke kernel-smoke obs-smoke tune-smoke
+.PHONY: test test-fast bench-smoke bench ckpt-smoke serve-smoke \
+        serve-load-smoke moe-smoke ring-smoke fault-smoke kernel-smoke \
+        obs-smoke tune-smoke
 
 # tier-1 verify (ROADMAP.md): full suite, stop on first failure
 test:
@@ -39,6 +40,25 @@ serve-smoke:
 	run_checks(['check_serve_engine_continuous_batching'], n_devices=4, \
 	           timeout=1200); \
 	print('serve smoke OK: continuous batching == per-request decode')"
+
+# paged-serving load smoke (serve/kv_pool.py paged pool, DESIGN.md §10):
+# the paged engine booted from an INT8 per-shard checkpoint must emit
+# token streams bit-identical to the slab engine on 4- AND 8-device
+# meshes (prefix cache hitting, pool fully drained after), the
+# speculative self-draft path must stay token-identical with > 1
+# accepted token per verify, then the multi-tenant trace bench runs its
+# admission / prefix-TTFT / acceptance gates against the committed
+# BENCH_serve.json structural snapshot
+serve-load-smoke:
+	$(PYPATH) $(PY) -c "\
+	from repro.testing.subproc import run_checks; \
+	run_checks(['check_serve_engine_paged'], n_devices=4, timeout=1200); \
+	run_checks(['check_serve_engine_paged', \
+	            'check_serve_engine_speculative'], n_devices=8, \
+	           timeout=1800); \
+	print('serve load smoke OK: paged == slab at 4/8 dev, speculative '\
+	      'token-identical with >1 accepted/verify')"
+	$(PYPATH) $(PY) -m benchmarks.serve_bench --smoke
 
 # MoE overlap smoke: tiny deepseek-style MoE stack (shared + routed
 # experts, chunked) with prefetch=1 — the layer-scan shared gathers and

@@ -15,6 +15,10 @@
                      resolved knobs + (k+1)-ring HBM ledger + break-even
                      depth per arch x mesh, checked against the committed
                      deterministic snapshot
+  serve_bench      — decode tok/s + TTFT vs occupancy, and the paged-pool
+                     multi-tenant trace (equal-HBM admission, prefix-cache
+                     TTFT, speculative acceptance) with its structural
+                     facts gated against the committed BENCH_serve.json
   roofline         — §Roofline table from the dry-run JSONs (if present)
 
 Any section that raises marks the whole run failed (nonzero exit) — no
@@ -33,7 +37,8 @@ import traceback
 def main() -> None:
     from benchmarks import (comm_volume, convergence, kernel_bench,
                             memory_model, overlap_bench, roofline,
-                            runtime_report, throughput_model, tuner_report)
+                            runtime_report, serve_bench, throughput_model,
+                            tuner_report)
     sections = {
         "comm_volume": comm_volume.main,
         "throughput_model": throughput_model.main,
@@ -43,6 +48,7 @@ def main() -> None:
         "overlap_bench": overlap_bench.main,
         "runtime_report": runtime_report.main,
         "tuner_report": tuner_report.main,
+        "serve_bench": serve_bench.main,
     }
     pick = [a for a in sys.argv[1:] if a in sections] or list(sections)
     failures = []

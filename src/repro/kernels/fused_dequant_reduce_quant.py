@@ -58,6 +58,18 @@ def _reduce_requant_kernel(p_ref, s_ref, out_p_ref, out_s_ref, *,
     out_s_ref[...] = s
 
 
+def _reduce_requant_kernel_sr(p_ref, s_ref, u_ref, out_p_ref, out_s_ref, *,
+                              block, pack_in, qmax_out, pack_out):
+    """Stochastic-rounding variant: the requantization consumes a (1, ct)
+    tile of pre-drawn uniforms (core.quant.stochastic_uniform), exactly
+    like the standalone SR quant kernel — the PRNG stays outside the
+    kernel so pallas/interpret/xla round identically per element."""
+    acc = _dequant_sum(p_ref[...], s_ref[...], block, pack_in)
+    q, s = _quant_body(acc[None], block, qmax_out, pack_out, u=u_ref[...])
+    out_p_ref[...] = q
+    out_s_ref[...] = s
+
+
 def dequant_reduce_pallas(payload: Array, scales: Array, cfg: QuantConfig,
                           out_dtype=jnp.float32,
                           interpret: bool = False) -> Array:
@@ -92,12 +104,17 @@ def dequant_reduce_pallas(payload: Array, scales: Array, cfg: QuantConfig,
 def dequant_reduce_quant_pallas(
     payload: Array, scales: Array,
     cfg_in: QuantConfig, cfg_out: QuantConfig,
+    u: Optional[Array] = None,
     interpret: bool = False,
 ) -> Tuple[Array, Array]:
     """qgZ intra-hop fusion: (N, P), (N, NB) -> requantized (P'), (NB).
 
     ``cfg_in`` describes the incoming payload, ``cfg_out`` the outgoing
-    (they share block_size; bits may differ, e.g. INT4 -> INT4).
+    (they share block_size; bits may differ, e.g. INT4 -> INT4).  ``u``
+    is an optional (C,) uniform field for stochastic requantization,
+    drawn OUTSIDE the kernel with the reference's segmentation
+    (core.quant.stochastic_uniform) so every backend rounds bit-
+    identically.
     """
     assert cfg_in.block_size == cfg_out.block_size
     N, P = payload.shape
@@ -110,16 +127,26 @@ def dequant_reduce_quant_pallas(
     pt_in = ct // 2 if pack_in else ct
     pt_out = ct // 2 if pack_out else ct
     grid = (C // ct,)
-    kernel = functools.partial(_reduce_requant_kernel, block=block,
-                               pack_in=pack_in, qmax_out=cfg_out.qmax,
-                               pack_out=pack_out)
+    in_specs = [
+        pl.BlockSpec((N, pt_in), lambda j: (0, j)),
+        pl.BlockSpec((N, nbt), lambda j: (0, j)),
+    ]
+    operands = [payload, scales]
+    if u is None:
+        kernel = functools.partial(_reduce_requant_kernel, block=block,
+                                   pack_in=pack_in, qmax_out=cfg_out.qmax,
+                                   pack_out=pack_out)
+    else:
+        assert u.shape == (C,), (u.shape, C)
+        kernel = functools.partial(_reduce_requant_kernel_sr, block=block,
+                                   pack_in=pack_in, qmax_out=cfg_out.qmax,
+                                   pack_out=pack_out)
+        in_specs.append(pl.BlockSpec((1, ct), lambda j: (0, j)))
+        operands.append(u.reshape(1, C))
     out_p, out_s = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((N, pt_in), lambda j: (0, j)),
-            pl.BlockSpec((N, nbt), lambda j: (0, j)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, pt_out), lambda j: (0, j)),
             pl.BlockSpec((1, nbt), lambda j: (0, j)),
@@ -129,5 +156,5 @@ def dequant_reduce_quant_pallas(
             jax.ShapeDtypeStruct((1, C // block), jnp.float32),
         ],
         interpret=interpret,
-    )(payload, scales)
+    )(*operands)
     return out_p[0], out_s[0]

@@ -23,13 +23,12 @@ reproduces the reference's segmentation and key-split structure exactly)
 and passing it as an extra tiled input: the in-kernel comparison
 ``u < s - floor(s)`` is then bit-identical to the jnp reference, so the
 determinism-through-dispatch contract (fixed key -> identical payloads on
-every backend) holds with the kernels actually running.  Two deliberate
-xla routes remain: ``cfg.stochastic`` with ``key=None`` goes to the
-reference to hit its loud "needs a PRNG key" assert, and the fused
-``dequant_reduce_quant`` still falls back for stochastic requants (its
-intra-hop output feeds a second quantize whose segmentation the fused
-kernel does not reproduce) — that one fallback stays documented in
-DESIGN.md §7.
+every backend) holds with the kernels actually running.  This covers the
+fused ``dequant_reduce_quant`` too: its (C,) accumulator is requantized
+with a uniform field drawn on the reference's 1-D segmentation, so the
+intra-hop stochastic requant runs in-kernel on every backend.  The one
+deliberate xla route left is ``cfg.stochastic`` with ``key=None``, which
+goes to the reference to hit its loud "needs a PRNG key" assert.
 """
 from __future__ import annotations
 
@@ -168,14 +167,23 @@ def dequant_reduce_quant(payload: Array, scales: Array, cfg_in: QuantConfig,
                          key: Optional[Array] = None) -> Tuple[Array, Array]:
     """Fused dequant -> fp32 reduce -> requant (qgZ intra-hop, §4.2)."""
     mode = backend()
-    if mode == "xla" or cfg_out.stochastic or key is not None:
-        # the one remaining stochastic fallback (see module docstring)
+    if mode == "xla" or (cfg_out.stochastic and key is None):
+        # second arm: reference raises the loud "needs a PRNG key" assert
         acc = _ref.dequant_reduce_ref(payload, scales, cfg_in, jnp.float32)
         from repro.core.quant import quantize_blockwise as q
         _count_dispatch("dequant_reduce_quant", "xla")
         return q(acc, cfg_out, key)
     _count_dispatch("dequant_reduce_quant", mode)
+    u = None
+    if cfg_out.stochastic:
+        # the reference requantizes the flat (C,) accumulator, so the
+        # uniform field uses its 1-D segmentation — this closed the last
+        # stochastic xla fallback (DESIGN.md §7)
+        from repro.core.quant import stochastic_uniform
+        C = payload.shape[1] * 2 if cfg_in.bits == 4 else payload.shape[1]
+        u = stochastic_uniform((C,), cfg_out, key)
     return _fq.dequant_reduce_quant_pallas(payload, scales, cfg_in, cfg_out,
+                                           u=u,
                                            interpret=(mode == "interpret"))
 
 

@@ -358,6 +358,28 @@ def lower_cell(arch_name: str, shape_name: str, multi_pod: bool,
             info["jaxpr_analysis"] = _jaxpr_info(ps.fn, (params, batch), mesh)
     else:  # decode
         batch_axes, kv_axes = serve_lib.serve_shape_policy(shape_name, axes)
+        # page-granularity alternative to the slab kv_pool line: what the
+        # paged engine (serve.PagedKVPool) would charge at full capacity.
+        # The paged arena shards only within-page tokens over kv_axes and
+        # replicates across the rest, so the honest per-device bill can be
+        # LARGER than the fully-sharded slab — the win is admission
+        # granularity (pages, not whole slots), not raw bytes.
+        kv_world = int(np.prod([sizes.get(a, 1) for a in kv_axes]))
+        page = kv_world * max(1, 16 // kv_world)
+        if shape.seq_len % page == 0 and not model.is_moe \
+                and set(model.period) == {"attn"}:
+            pled = serve_ledger(model, sizes, n_slots=shape.global_batch,
+                                kv_len=shape.seq_len, page_size=page,
+                                kv_axes=kv_axes, budget_bytes=HBM_BYTES)
+            pps = shape.seq_len // page
+            info["paged_pool"] = {
+                "page_size": page,
+                "pages_per_slot": pps,
+                "n_pages": shape.global_batch * pps,
+                "kv_pool_bytes": pled.line("kv_pool"),
+                "slab_kv_pool_bytes": led.line("kv_pool"),
+                "ledger_fits": pled.fits,
+            }
         ds = serve_lib.build_decode_step(model, mesh, batch_axes, kv_axes,
                                          donate=True)
         pdt = serve_params_dtype or jnp.bfloat16
@@ -625,6 +647,14 @@ def main():
     if "prefetch" in info:
         print(f"  schedule: prefetch={info['prefetch']} "
               f"effective={info['prefetch_effective']}")
+    pp = info.get("paged_pool")
+    if pp:
+        print(f"  paged pool: page_size={pp['page_size']} "
+              f"n_pages={pp['n_pages']} "
+              f"({pp['pages_per_slot']} pages/slot) "
+              f"kv/dev={pp['kv_pool_bytes']/2**30:.2f} GiB "
+              f"vs slab {pp['slab_kv_pool_bytes']/2**30:.2f} GiB "
+              f"fits={pp['ledger_fits']}")
     ov = info.get("overlap", {})
     if "overlap_fraction" in ov:
         loops = ov.get("per_loop", {})

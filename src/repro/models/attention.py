@@ -327,6 +327,119 @@ def decode_attend(
     return out.astype(q.dtype)
 
 
+def _kv_axes_world(kv_seq_axes: Sequence[str]) -> int:
+    w = 1
+    for ax in kv_seq_axes:
+        w *= _axis_size(ax)
+    return w
+
+
+def paged_insert(
+    k_cache: Array,               # (N_pages, page_loc, K, hd) local shard
+    v_cache: Array,
+    k_new: Array,                 # (B, T, K, hd)
+    v_new: Array,
+    positions: Array,             # (B, T) int32 global write positions
+    table: Array,                 # (B, Pm) int32 physical page ids, -1 empty
+    kv_seq_axes: Sequence[str] = (),
+) -> Tuple[Array, Array]:
+    """Scatter new K/V into a paged arena through per-slot page tables.
+
+    The arena's page dim is unsharded; the *within-page* token dim is
+    sharded over ``kv_seq_axes`` (global page size = page_loc x world, this
+    device owning within-page offsets [d_off, d_off + page_loc)).  Writes
+    whose logical page maps to -1 (inactive row / past the reservation) or
+    whose within-page offset belongs to another shard are dropped — this
+    is what lets one batched step carry prefilling/idle rows without ever
+    touching pages they don't own.
+    """
+    N, page_loc = k_cache.shape[0], k_cache.shape[1]
+    B, T = positions.shape
+    Pm = table.shape[1]
+    page = page_loc * _kv_axes_world(kv_seq_axes)
+    d_off = seq_shard_offset(page_loc, kv_seq_axes)
+
+    lp = positions // page                                     # (B, T)
+    phys = jnp.take_along_axis(table, jnp.clip(lp, 0, Pm - 1), axis=1)
+    loc = positions % page - d_off
+    ok = (phys >= 0) & (lp >= 0) & (lp < Pm) & (loc >= 0) & (loc < page_loc)
+    rows = jnp.where(ok, phys, N).reshape(-1)                  # N = out of range
+    cols = jnp.clip(loc, 0, page_loc - 1).reshape(-1)
+
+    def upd(cache, new):
+        flat = new.reshape(B * T, new.shape[2], new.shape[3])
+        return cache.at[rows, cols].set(flat.astype(cache.dtype),
+                                        mode="drop")
+
+    return upd(k_cache, k_new), upd(v_cache, v_new)
+
+
+def paged_attend(
+    q: Array,                     # (B, T, H, hd) chunk queries
+    k_cache: Array,               # (N_pages, page_loc, K, hd) local shard
+    v_cache: Array,
+    positions: Array,             # (B, T) int32 query positions
+    table: Array,                 # (B, Pm) int32 physical page ids, -1 empty
+    *,
+    kv_seq_axes: Sequence[str] = (),
+    softmax_scale: Optional[float] = None,
+    logit_softcap: float = 0.0,
+) -> Array:
+    """Exact split-KV attention over a paged arena (2-pass pmax/psum).
+
+    Gathers each row's pages into a (B, Pm*page_loc) causal view; key
+    positions are reconstructed from logical page index x page size +
+    within-page offset, with -1 marking unmapped pages.  Multi-token rows
+    (T > 1: chunked prefill, speculative verify) get per-query causal
+    masks against their own just-inserted keys.  Unlike decode_attend the
+    normalizer is clamped: an all-(-1) table row (idle slot riding the
+    batched step) attends to nothing and yields zeros, not NaN.
+    """
+    B, T, H, hd = q.shape
+    N, page_loc, K = k_cache.shape[0], k_cache.shape[1], k_cache.shape[2]
+    Pm = table.shape[1]
+    page = page_loc * _kv_axes_world(kv_seq_axes)
+    d_off = seq_shard_offset(page_loc, kv_seq_axes)
+    scale = softmax_scale or hd ** -0.5
+    S = Pm * page_loc
+
+    safe = jnp.maximum(table, 0)
+    kk = k_cache[safe].reshape(B, S, K, hd)
+    vv = v_cache[safe].reshape(B, S, K, hd)
+    rep = H // K
+    kk = jnp.repeat(kk, rep, axis=2)                           # (B, S, H, hd)
+    vv = jnp.repeat(vv, rep, axis=2)
+
+    kpos = jnp.where(
+        (table >= 0)[:, :, None],
+        jnp.arange(Pm, dtype=jnp.int32)[None, :, None] * page + d_off
+        + jnp.arange(page_loc, dtype=jnp.int32)[None, None, :],
+        -1,
+    ).reshape(B, S)
+
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kk,
+                        preferred_element_type=jnp.float32) * scale
+    if logit_softcap:
+        logits = jnp.tanh(logits / logit_softcap) * logit_softcap
+    valid = (kpos >= 0)[:, None, :] & \
+        (kpos[:, None, :] <= positions[:, :, None])            # (B, T, S)
+    logits = jnp.where(valid[:, None, :, :], logits, NEG_INF)
+
+    m = jnp.max(logits, axis=-1)                               # (B, H, T)
+    if kv_seq_axes:
+        m = lax.pmax(m, tuple(kv_seq_axes))
+    e = jnp.exp(logits - m[..., None])
+    e = jnp.where(valid[:, None, :, :], e, 0.0)
+    denom = jnp.sum(e, axis=-1)                                # (B, H, T)
+    num = jnp.einsum("bhqk,bkhd->bqhd", e.astype(q.dtype), vv)
+    if kv_seq_axes:
+        denom = lax.psum(denom, tuple(kv_seq_axes))
+        num = lax.psum(num, tuple(kv_seq_axes))
+    denom = jnp.maximum(denom, 1e-30)
+    out = num / jnp.moveaxis(denom, 1, 2)[..., None].astype(num.dtype)
+    return out.astype(q.dtype)
+
+
 def cache_insert(
     k_cache: Array,               # (B, S_loc, K, hd)
     v_cache: Array,

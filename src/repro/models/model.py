@@ -773,6 +773,74 @@ class Model:
         logits = self._head_logits(zi, params, h)
         return logits, {"blocks": new_caches, "rem": new_rem}
 
+    # -------------------------------------------------------------- paged
+
+    def paged_fn(self, params, caches, batch, page_table: Array,
+                 start_pos: Array, rs: RunSpec) -> Tuple[Array, Any]:
+        """One paged-serving step: (B, T) tokens against a page arena.
+
+        ``caches`` hold a PAGE ARENA — (n_pages, page_size, K, hd) per
+        layer, shared by every slot — instead of per-slot slabs;
+        ``page_table`` (B, Pm) maps each row's logical pages to physical
+        ones (-1 = unmapped: the row writes nothing and attends to
+        nothing).  One step shape serves all three paged workloads:
+        T=1 batched decode, T=gamma+1 speculative verify, and B=1
+        T=chunk chunked prefill.  Row r's token j sits at position
+        ``start_pos[r] + j``; logits come back for every position,
+        (B, T, V).  Paged mode is attn-only (no window/ssd/rec/moe).
+        """
+        cfg, z = self.cfg, self.zcfg
+        assert not self.is_moe and set(self.period) == {"attn"}, \
+            "paged serving supports dense attn-only stacks"
+        assert not cfg.mrope, "paged serving does not support mrope"
+        zi = lambda f: zero_apply_inference(f, z)
+        h = zi(lambda W, t: self.embed_spec.unpack(W)["emb"][t]
+               .astype(z.compute_dtype))(params["embed"], batch["tokens"])
+        B, T = h.shape[0], h.shape[1]
+        start_pos = attn_lib.per_seq_pos(start_pos, B)
+        tpos = start_pos[:, None] + jnp.arange(T, dtype=jnp.int32)  # (B, T)
+        cos, sin = nn.rope_table(tpos, cfg.d_head, cfg.rope_theta)
+        pos = {"rope": (lax.stop_gradient(cos), lax.stop_gradient(sin)),
+               "cache_pos": start_pos, "positions": tpos,
+               "page_table": page_table}
+
+        def period_fn(W, h, cache, kinds=self.period, spec=self.period_spec):
+            p = spec.unpack(W.astype(z.compute_dtype))
+            new = []
+            for i, kind in enumerate(kinds):
+                h, c, _ = apply_block(cfg, kind, _sub(p, f"{i}."), h, rs,
+                                      pos, cache[i])
+                new.append(c)
+            return h, tuple(new)
+
+        ap = zero_scan_inference(
+            lambda W, h, cache: period_fn(W, h, cache), z)
+        h, new_caches = ap(params["blocks"], h, caches["blocks"])
+        new_rem = None
+        if self.rem_spec:
+            h, new_rem = zi(partial(period_fn, kinds=self.period[:self.rem],
+                                    spec=self.rem_spec))(
+                params["rem"], h, caches["rem"])
+
+        logits = self._head_logits(zi, params, h)
+        return logits, {"blocks": new_caches, "rem": new_rem}
+
+    def paged_cache_shapes(self, n_pages: int, page_size: int,
+                           dtype=jnp.bfloat16):
+        """GLOBAL page-arena shapes matching paged_fn's cache layout.
+
+        Same per-layer layout as :meth:`cache_shapes` with (batch, kv_len)
+        reinterpreted as (n_pages, page_size): the arena's page dim is
+        unsharded, the within-page token dim shards over kv_axes.
+        """
+        assert set(self.period) == {"attn"}, "paged caches are attn-only"
+        return self.cache_shapes(n_pages, page_size, dtype)
+
+    def init_paged_caches(self, n_pages: int, page_size: int,
+                          dtype=jnp.bfloat16):
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.paged_cache_shapes(n_pages, page_size, dtype))
+
     # ------------------------------------------------------------- caches
 
     def cache_shapes(self, batch: int, kv_len: int, dtype=jnp.bfloat16):

@@ -122,7 +122,7 @@ def block_entries(cfg: ArchConfig, kind: str, pre: str):
 @dataclasses.dataclass(frozen=True)
 class RunSpec:
     """Static run-mode description (shardings + mode)."""
-    mode: str = "train"                # train | prefill | decode
+    mode: str = "train"                # train | prefill | decode | paged
     seq_axes: Tuple[str, ...] = ()     # activation sequence sharding
     kv_axes: Tuple[str, ...] = ()      # cache sequence sharding
     kv_len: int = 0                    # decode: global cache capacity
@@ -155,7 +155,22 @@ def _attn_block(cfg, kind, p, h, rs: RunSpec, pos, cache):
     k = nn.apply_rope(k, cos, sin)
 
     window = cfg.window if kind == "local" else 0
-    if rs.mode == "decode":
+    if rs.mode == "paged":
+        # Paged serving: the cache is a page arena shared by every slot,
+        # addressed through pos["page_table"].  One step shape covers
+        # decode (T=1), speculative verify (T=gamma+1) and chunked prefill
+        # (B=1, T=chunk): insert the chunk's keys, then attend causally at
+        # pos["positions"].  Sliding-window layers keep the slab ring
+        # buffer path — the engine gates paged mode to attn-only stacks.
+        assert kind != "local", "paged serving does not support window layers"
+        kc, vc = attn.paged_insert(cache["k"], cache["v"], k, v,
+                                   pos["positions"], pos["page_table"],
+                                   rs.kv_axes)
+        o = attn.paged_attend(q, kc, vc, pos["positions"],
+                              pos["page_table"], kv_seq_axes=rs.kv_axes,
+                              logit_softcap=cfg.logit_softcap)
+        new_cache = {"k": kc, "v": vc}
+    elif rs.mode == "decode":
         cap_g = cache["k"].shape[1] * _axes_prod(rs.kv_axes)  # global capacity
         t = attn.per_seq_pos(pos["cache_pos"], B)        # (B,)
         slot = jnp.mod(t, cap_g)                         # (B,)

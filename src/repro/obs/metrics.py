@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import threading
 from collections import deque
-from typing import Dict, Optional, Union
+from typing import Dict, Optional, Sequence, Union
 
 
 class Counter:
@@ -92,6 +92,22 @@ class Histogram:
         xs = sorted(self.samples)
         i = min(len(xs) - 1, max(0, int(round((p / 100.0) * (len(xs) - 1)))))
         return xs[i]
+
+    def quantiles(self, ps: Sequence[float] = (50, 90, 99)
+                  ) -> Dict[str, Optional[float]]:
+        """Quantile export: {"p50": ..., "p90": ..., ...} plus the window
+        sample count, sorted once for all requested quantiles.  This is
+        the shape ``ServeEngine.stats()`` and the serve bench publish."""
+        if not self.samples:
+            return {**{f"p{g:g}": None for g in ps}, "n": 0}
+        xs = sorted(self.samples)
+        n = len(xs)
+        out: Dict[str, Optional[float]] = {}
+        for p in ps:
+            i = min(n - 1, max(0, int(round((p / 100.0) * (n - 1)))))
+            out[f"p{p:g}"] = xs[i]
+        out["n"] = self.count
+        return out
 
     @property
     def mean(self) -> Optional[float]:

@@ -5,7 +5,7 @@ train/serve.py) owns the shard_map step builders and sharding specs,
 ZeroState (train/state.py) owns parameters.
 """
 from repro.serve.engine import ServeEngine                      # noqa: F401
-from repro.serve.kv_pool import KVPool                          # noqa: F401
+from repro.serve.kv_pool import KVPool, PagedKVPool             # noqa: F401
 from repro.serve.sampling import (sample_logits, top_k_mask,    # noqa: F401
                                   top_p_mask)
 from repro.serve.scheduler import FIFOScheduler, Request        # noqa: F401

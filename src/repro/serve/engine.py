@@ -41,6 +41,20 @@ Greedy decoding through the engine is bit-identical to running each
 request alone through the raw prefill+decode steps: per-row ops (matmuls,
 norms, attention with per-row masks) do not mix batch rows, and the qwZ
 weight gathers are batch-independent (tests/test_serve_engine.py).
+
+Paged mode (``pool="paged"``, DESIGN.md §10) swaps the whole-slot pool
+for a ``PagedKVPool`` page arena + per-slot page tables, resolved inside
+ONE jitted paged step (``steps.build_paged_step``) that covers batched
+decode (T=1), chunked prefill (B=1, T=chunk) and speculative verify
+(T=spec_tokens+1).  On top of the table ride the prefix cache (chain-
+hashed full prompt pages, refcounted, LRU-retained), chunked prefill
+(every prompt ingests in fixed-size chunks interleaved with decode
+ticks) and speculative decoding (``draft=(model, params)``: a small
+drafter proposes spec_tokens greedily, the target verifies them in one
+multi-token step — greedy output is token-identical to target-only
+decode by construction, the drafter only changes how many positions each
+target step advances).  Paged mode requires dense attn-only stacks and
+unsharded batch (the arena is one global pool any row may reference).
 """
 from __future__ import annotations
 
@@ -57,7 +71,7 @@ from jax.sharding import NamedSharding
 from repro.obs.metrics import Histogram, get_registry
 from repro.obs.trace import get_tracer
 from repro.serve import steps
-from repro.serve.kv_pool import KVPool
+from repro.serve.kv_pool import KVPool, PagedKVPool
 from repro.serve.sampling import SamplerCache, request_key, token_key
 from repro.serve.scheduler import FIFOScheduler, Request
 
@@ -76,6 +90,19 @@ class _Active:
     key: Array
 
 
+@dataclasses.dataclass(eq=False)        # identity equality: ndarray fields
+class _Prefill:
+    """A paged request mid-prefill: ``done``/``d_done`` are the next chunk
+    start for the target / drafter (seeded past a prefix-cache hit), and
+    ``logits_row`` holds the target's final-chunk logits row once its last
+    chunk ran (the first token samples from it when BOTH models finish)."""
+    req: Request
+    slot: int
+    done: int
+    d_done: int
+    logits_row: Optional[Array] = None
+
+
 class ServeEngine:
     def __init__(self, model, mesh, params: Dict[str, Array], *,
                  n_slots: int, kv_len: int,
@@ -86,6 +113,12 @@ class ServeEngine:
                  prefetch: Optional[int] = None,
                  kernel_backend: Optional[str] = None,
                  tune: str = "off", hbm_gb: float = 16.0,
+                 pool: str = "slab", page_size: int = 16,
+                 n_pages: Optional[int] = None,
+                 chunk_size: Optional[int] = None,
+                 prefix_cache: bool = True,
+                 draft: Optional[Tuple[Any, Dict[str, Array]]] = None,
+                 spec_tokens: int = 4,
                  clock: Callable[[], float] = time.monotonic):
         cfg = model.cfg
         self.policy = None
@@ -135,26 +168,83 @@ class ServeEngine:
             raise ValueError(
                 f"kv_len={kv_len} below the sliding window {cfg.window}: "
                 f"ring caches from prefill would not fit the pool")
+        if pool not in ("slab", "paged"):
+            raise ValueError(f"pool must be 'slab' or 'paged', got {pool!r}")
+        if draft is not None and pool != "paged":
+            raise ValueError("speculative decoding rides the paged step; "
+                             "pass pool='paged'")
         self.model = model
         self.mesh = mesh
         self.params = params
         self.n_slots = n_slots
         self.kv_len = kv_len
-        self.pool = KVPool(model, mesh, n_slots, kv_len,
-                           batch_axes=batch_axes, kv_axes=kv_axes,
-                           dtype=cache_dtype or model.zcfg.compute_dtype)
+        self.pool_kind = pool
+        cdtype = cache_dtype or model.zcfg.compute_dtype
         self.scheduler = scheduler if scheduler is not None \
             else FIFOScheduler(kv_len=kv_len)
         # prompts right-padded to buckets are exact only when every layer
         # masks by position (full attention): recurrent/ring/MoE states
         # would absorb the pad tokens, so those prefill at exact length
         self._pad_ok = set(model.period) == {"attn"}
-        # prefill: batch=1 per request (jit recompiles per bucket length);
-        # decode: ONE compiled step for the whole pool, any occupancy
-        self._prefill = steps.build_prefill_step(model, mesh, (), (),
-                                                 with_last_pos=True)
-        self._decode = steps.build_decode_step(model, mesh, batch_axes,
-                                               kv_axes, donate=donate)
+        self.draft_pool = None
+        self._prefilling: List[_Prefill] = []
+        if pool == "paged":
+            if batch_axes:
+                raise ValueError(
+                    "paged serving keeps the batch unsharded: the page "
+                    "arena is one global pool any slot may reference, "
+                    f"incompatible with batch_axes={batch_axes}")
+            if not self._pad_ok:
+                raise ValueError(
+                    "paged serving supports dense attn-only stacks; got "
+                    f"period {model.period} (use pool='slab')")
+            self._chunk = chunk_size if chunk_size is not None \
+                else min(kv_len, 2 * page_size)
+            if self._chunk % page_size or self._chunk < 1:
+                raise ValueError(f"chunk_size {self._chunk} must be a "
+                                 f"positive multiple of page_size "
+                                 f"{page_size}")
+            self.pool = PagedKVPool(model, mesh, n_slots, kv_len,
+                                    page_size=page_size, n_pages=n_pages,
+                                    kv_axes=kv_axes, dtype=cdtype,
+                                    prefix_cache=prefix_cache)
+            # ONE builder; each (B, T) workload shape compiles once:
+            # (n_slots, 1) decode, (1, chunk) prefill, (n_slots, g+1) verify
+            self._paged = steps.build_paged_step(model, mesh, kv_axes,
+                                                 donate=donate)
+            if draft is not None:
+                dmodel, dparams = draft
+                if dmodel.cfg.vocab != cfg.vocab:
+                    raise ValueError(
+                        f"drafter vocab {dmodel.cfg.vocab} != target vocab "
+                        f"{cfg.vocab}")
+                if spec_tokens < 2:
+                    raise ValueError("spec_tokens must be >= 2 (one draft "
+                                     "round must beat plain decode)")
+                self.spec_tokens = spec_tokens
+                self.draft_model = dmodel
+                self.draft_params = dparams
+                # the drafter arena stays at FULL page capacity (its
+                # reservations can then never fail while a slot is free),
+                # so drafter slot ids always mirror the target pool's
+                self.draft_pool = PagedKVPool(
+                    dmodel, mesh, n_slots, kv_len, page_size=page_size,
+                    kv_axes=kv_axes, dtype=cdtype,
+                    prefix_cache=prefix_cache)
+                self._draft_paged = steps.build_paged_step(
+                    dmodel, mesh, kv_axes, donate=donate)
+                self._spec_hist = Histogram("serve.spec_accepted",
+                                            window=512)
+        else:
+            self.pool = KVPool(model, mesh, n_slots, kv_len,
+                               batch_axes=batch_axes, kv_axes=kv_axes,
+                               dtype=cdtype)
+            # prefill: batch=1 per request (jit recompiles per bucket
+            # length); decode: ONE compiled step for the whole pool
+            self._prefill = steps.build_prefill_step(model, mesh, (), (),
+                                                     with_last_pos=True)
+            self._decode = steps.build_decode_step(model, mesh, batch_axes,
+                                                   kv_axes, donate=donate)
         self._samplers = SamplerCache()
         self.clock = clock                       # injectable for tests
         self.slots: List[Optional[_Active]] = [None] * n_slots
@@ -167,7 +257,8 @@ class ServeEngine:
         # counts are exactly-once by construction: "expired" increments
         # where the request irrevocably leaves the system — scheduler.expire
         # pops queued requests, _retire clears the slot of active ones.
-        self._counts = {"admitted": 0, "completed": 0, "expired": 0}
+        self._counts = {"admitted": 0, "completed": 0, "expired": 0,
+                        "prefill_chunks": 0}
         self._submit_t: Dict[int, float] = {}     # uid -> clock() at submit
         self._ttft = Histogram("serve.ttft_ms", window=512)
         self._tok_lat = Histogram("serve.tok_latency_ms", window=512)
@@ -193,6 +284,10 @@ class ServeEngine:
         ``scheduler.Request`` (max_new_tokens, temperature, top_k, top_p,
         seed, eos_id, on_token, deadline — absolute ``clock()`` time after
         which the request is dropped with status ``"timeout"``)."""
+        if self.draft_pool is not None and kw.get("temperature", 0.0) > 0:
+            raise ValueError(
+                "speculative decoding verifies greedily: temperature>0 "
+                "requests are not token-identical under it")
         req = Request(prompt=np.asarray(prompt, np.int32), **kw)
         uid = self.scheduler.submit(req)
         self.results[uid] = []
@@ -206,7 +301,8 @@ class ServeEngine:
 
     @property
     def done(self) -> bool:
-        return not self.n_active and not len(self.scheduler)
+        return not self.n_active and not self._prefilling \
+            and not len(self.scheduler)
 
     # ------------------------------------------------------------- steps
 
@@ -233,6 +329,8 @@ class ServeEngine:
     def _retire(self, a: _Active, status: str = "done") -> None:
         self.slots[a.slot] = None
         self.pool.free(a.slot)
+        if self.draft_pool is not None:
+            self.draft_pool.free(a.slot)
         self.status[a.req.uid] = status
         key = "completed" if status == "done" else "expired"
         self._counts[key] += 1
@@ -255,6 +353,17 @@ class ServeEngine:
             if a is not None and a.req.deadline is not None \
                     and now >= a.req.deadline:
                 self._retire(a, status="timeout")
+        for pf in list(self._prefilling):
+            if pf.req.deadline is not None and now >= pf.req.deadline:
+                self._prefilling.remove(pf)
+                self.pool.free(pf.slot)
+                if self.draft_pool is not None:
+                    self.draft_pool.free(pf.slot)
+                self.status[pf.req.uid] = "timeout"
+                self._counts["expired"] += 1
+                get_registry().counter("serve.expired").inc()
+                get_tracer().event("serve.expire_prefilling",
+                                   uid=pf.req.uid)
 
     def _admit(self, emitted: List[Tuple[int, int]]) -> None:
         for req, bucket in self.scheduler.admit(self.pool.n_free):
@@ -292,13 +401,254 @@ class ServeEngine:
             else:
                 self.slots[slot] = a
 
+    # ------------------------------------------------------- paged engine
+
+    def _run_paged(self, draft: bool, tokens: np.ndarray, table: np.ndarray,
+                   start: np.ndarray) -> Array:
+        """One jitted paged step (target or drafter): uploads the (B, T)
+        tokens, (B, Pm) page table and (B,) start positions, advances the
+        pool's arena in place (donated), returns (B, T, V) logits."""
+        step = self._draft_paged if draft else self._paged
+        pool = self.draft_pool if draft else self.pool
+        params = self.draft_params if draft else self.params
+        batch = self._put({"tokens": np.asarray(tokens, np.int32)},
+                          step.in_specs[2])
+        table_dev = jax.device_put(
+            np.asarray(table, np.int32),
+            NamedSharding(self.mesh, step.in_specs[3]))
+        start_dev = jax.device_put(
+            np.asarray(start, np.int32),
+            NamedSharding(self.mesh, step.in_specs[4]))
+        logits, pool.caches = step.fn(params, pool.caches, batch,
+                                      table_dev, start_dev)
+        return logits
+
+    def _admit_paged(self) -> None:
+        """Admit while a slot AND the full page reservation fit.  The head
+        of the queue blocks admission when its pages don't fit (strict
+        FIFO): reservations are all-or-nothing, so a refused head mutates
+        nothing and retries next tick."""
+        while self.pool.n_free:
+            req = self.scheduler.peek()
+            if req is None:
+                break
+            res = self.pool.alloc(req.prompt, req.max_new_tokens,
+                                  align=self._chunk)
+            if res is None:
+                break
+            slot, matched = res
+            d_matched = matched
+            if self.draft_pool is not None:
+                # reserve the drafter's spec_tokens of lookahead too; its
+                # full-capacity arena makes this infallible slot-for-slot
+                dres = self.draft_pool.alloc(
+                    req.prompt, req.max_new_tokens + self.spec_tokens,
+                    align=self._chunk)
+                assert dres is not None and dres[0] == slot, \
+                    "drafter pool must mirror target slots"
+                d_matched = dres[1]
+            self.scheduler.pop()
+            self.status[req.uid] = "active"
+            self._counts["admitted"] += 1
+            get_registry().counter("serve.admitted").inc()
+            self.slot_history[req.uid] = slot
+            get_tracer().event("serve.admit_paged", uid=req.uid, slot=slot,
+                               matched=matched)
+            self._prefilling.append(
+                _Prefill(req=req, slot=slot, done=matched,
+                         d_done=d_matched))
+
+    def _prefill_chunk(self, draft: bool, pf: _Prefill) -> Array:
+        """Run ONE fixed-size prefill chunk for ``pf`` (zero-padded past
+        the prompt; the pad's garbage KV is causally masked and later
+        overwritten by decode writes at those positions)."""
+        start = pf.d_done if draft else pf.done
+        prompt = pf.req.prompt
+        end = min(start + self._chunk, len(prompt))
+        toks = np.zeros((1, self._chunk), np.int32)
+        toks[0, : end - start] = prompt[start:end]
+        pool = self.draft_pool if draft else self.pool
+        logits = self._run_paged(draft, toks,
+                                 pool.table[pf.slot: pf.slot + 1],
+                                 np.full((1,), start, np.int32))
+        if draft:
+            pf.d_done = end
+        else:
+            pf.done = end
+        return logits
+
+    def _prefill_tick(self, emitted: List[Tuple[int, int]]) -> None:
+        """Advance every mid-prefill request by ONE chunk (target and,
+        when drafting, drafter) — the chunk quantum is what lets decode
+        ticks interleave with long-prompt ingestion.  A request whose
+        models have both finished samples its first token here."""
+        tracer = get_tracer()
+        for pf in list(self._prefilling):
+            P = len(pf.req.prompt)
+            if pf.done < P:
+                s = pf.done
+                with tracer.span("serve.prefill_chunk", uid=pf.req.uid,
+                                 slot=pf.slot, start=s, step=self._tick):
+                    logits = self._prefill_chunk(False, pf)
+                self._counts["prefill_chunks"] += 1
+                if pf.done >= P:
+                    # final chunk: the row holding the LAST prompt token's
+                    # logits seeds the first sampled token
+                    pf.logits_row = logits[0, (P - 1) - s]
+            if self.draft_pool is not None and pf.d_done < P:
+                self._prefill_chunk(True, pf)
+            if pf.done >= P and (self.draft_pool is None
+                                 or pf.d_done >= P):
+                self._finish_prefill(pf, emitted)
+
+    def _finish_prefill(self, pf: _Prefill,
+                        emitted: List[Tuple[int, int]]) -> None:
+        req, slot = pf.req, pf.slot
+        P = len(req.prompt)
+        self._prefilling.remove(pf)
+        self.pool.lengths[slot] = P
+        self.pool.register_prefix(slot, req.prompt)
+        if self.draft_pool is not None:
+            self.draft_pool.lengths[slot] = P
+            self.draft_pool.register_prefix(slot, req.prompt)
+        key = request_key(req.seed)
+        tok = self._sample(req, pf.logits_row, token_key(key, 0))
+        t0 = self._submit_t.get(req.uid)
+        if t0 is not None:
+            ttft_ms = (self.clock() - t0) * 1e3
+            self._ttft.observe(ttft_ms)
+            get_registry().histogram("serve.ttft_ms").observe(ttft_ms)
+        a = _Active(req=req, slot=slot, pos=P, n_gen=1,
+                    last_token=tok, key=key)
+        self._emit(a, tok)
+        emitted.append((req.uid, tok))
+        if self._finished(a, tok):
+            self._retire(a)
+        else:
+            self.slots[slot] = a
+
+    def _active_rows(self, active: List[_Active], width: int
+                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(tokens, start, table) step inputs with NON-active rows fully
+        masked: an all-(-1) table row writes nothing and attends to
+        nothing, so idle/prefilling slots riding the batched step can
+        never touch pages they don't own (shared prefix pages included)."""
+        tokens = np.zeros((self.n_slots, width), np.int32)
+        start = np.zeros((self.n_slots,), np.int32)
+        table = np.full_like(self.pool.table, -1)
+        for a in active:
+            tokens[a.slot, 0] = a.last_token
+            start[a.slot] = a.pos
+            table[a.slot] = self.pool.table[a.slot]
+        return tokens, start, table
+
+    def _decode_paged(self, active: List[_Active],
+                      emitted: List[Tuple[int, int]], tracer) -> None:
+        tokens, start, table = self._active_rows(active, 1)
+        t0 = time.perf_counter()
+        with tracer.span("serve.decode", step=self._tick,
+                         batch=len(active)):
+            logits = self._run_paged(False, tokens, table, start)
+            n_tok = 0
+            for a in active:
+                tok = self._sample(a.req, logits[a.slot, 0],
+                                   token_key(a.key, a.n_gen))
+                a.n_gen += 1
+                a.pos += 1
+                self.pool.lengths[a.slot] = a.pos
+                a.last_token = tok
+                self._emit(a, tok)
+                emitted.append((a.req.uid, tok))
+                n_tok += 1
+                if self._finished(a, tok):
+                    self._retire(a)
+        dur = time.perf_counter() - t0
+        self._decode_win.append((dur, n_tok))
+        lat_ms = dur * 1e3
+        self._tok_lat.observe(lat_ms)
+        get_registry().histogram("serve.tok_latency_ms").observe(lat_ms)
+
+    def _spec_tick(self, active: List[_Active],
+                   emitted: List[Tuple[int, int]], tracer) -> None:
+        """One speculative round: g greedy drafter steps propose tokens
+        x_1..x_g, ONE multi-token target step verifies positions p..p+g,
+        and each row commits the longest draft prefix the target agrees
+        with (+1 bonus token from the target's own logits).
+
+        Acceptance is capped at g-1 drafts (g emitted tokens): accepting
+        all g would leave the drafter's cache with a hole at p+g (x_g was
+        proposed but never written), breaking the next round.  Rejected
+        positions hold garbage KV in both caches; the next round's writes
+        cover [p', p'+g] ⊇ that garbage before anything reads it.  Under
+        greedy sampling every emitted token is a target argmax given the
+        same committed stream, so the output is token-identical to
+        target-only decode — the drafter only sets the stride.
+        """
+        g = self.spec_tokens
+        tokens, start, ttable = self._active_rows(active, g + 1)
+        dtable = np.full_like(self.draft_pool.table, -1)
+        for a in active:
+            dtable[a.slot] = self.draft_pool.table[a.slot]
+        x = tokens                                    # x[:, 0] = pending
+        t0 = time.perf_counter()
+        with tracer.span("serve.spec_round", step=self._tick,
+                         batch=len(active)):
+            for j in range(g):
+                dlogits = self._run_paged(True, x[:, j: j + 1], dtable,
+                                          start + j)
+                x[:, j + 1] = np.asarray(
+                    jnp.argmax(dlogits[:, 0, :], axis=-1), np.int32)
+            vlogits = self._run_paged(False, x, ttable, start)
+            truth = np.asarray(jnp.argmax(vlogits, axis=-1), np.int32)
+            n_tok = 0
+            for a in active:
+                p = a.pos
+                m = 0
+                while True:
+                    tok = int(truth[a.slot, m])
+                    a.n_gen += 1
+                    a.pos = p + m + 1
+                    a.last_token = tok
+                    self.pool.lengths[a.slot] = a.pos
+                    self.draft_pool.lengths[a.slot] = a.pos
+                    self._emit(a, tok)
+                    emitted.append((a.req.uid, tok))
+                    n_tok += 1
+                    if self._finished(a, tok):
+                        self._retire(a)
+                        break
+                    if m >= g - 1 or int(x[a.slot, m + 1]) != tok:
+                        break
+                    m += 1
+                self._spec_hist.observe(m + 1)
+                get_registry().histogram("serve.spec_accepted") \
+                    .observe(m + 1)
+        dur = time.perf_counter() - t0
+        self._decode_win.append((dur, n_tok))
+        lat_ms = dur * 1e3
+        self._tok_lat.observe(lat_ms)
+        get_registry().histogram("serve.tok_latency_ms").observe(lat_ms)
+
     def step(self) -> List[Tuple[int, int]]:
         """One engine iteration: admit waiting requests, then one batched
         decode over every occupied slot.  Returns the (uid, token) pairs
-        emitted this step, in slot order."""
+        emitted this step, in slot order.  Paged mode additionally runs
+        one prefill chunk per mid-prefill request before the decode (or
+        speculative) tick."""
         emitted: List[Tuple[int, int]] = []
         tracer = self._tick_begin()
         self._expire(self.clock())
+        if self.pool_kind == "paged":
+            self._admit_paged()
+            self._prefill_tick(emitted)
+            active = [a for a in self.slots if a is not None]
+            if active:
+                if self.draft_pool is not None:
+                    self._spec_tick(active, emitted, tracer)
+                else:
+                    self._decode_paged(active, emitted, tracer)
+            self._tick_end(tracer)
+            return emitted
         self._admit(emitted)
         active = [a for a in self.slots if a is not None]
         if not active:
@@ -353,12 +703,14 @@ class ServeEngine:
 
     def stats(self) -> Dict[str, Any]:
         """Point-in-time snapshot: lifecycle counts, occupancy, and
-        sliding-window latency percentiles (the Histogram window bounds
-        memory; percentiles are exact over that window)."""
+        sliding-window latency quantiles (p50/p90/p99, exact over the
+        Histogram window, which bounds memory).  Paged engines add pool
+        utilization + prefix-cache counters, speculative ones the
+        accepted-tokens-per-verify distribution."""
         win = list(self._decode_win)
         toks = sum(n for _, n in win)
         secs = sum(d for d, _ in win)
-        return {
+        out = {
             "admitted": self._counts["admitted"],
             "completed": self._counts["completed"],
             "expired": self._counts["expired"],
@@ -366,14 +718,20 @@ class ServeEngine:
             "active": self.n_active,
             "occupancy": self.n_active / self.n_slots,
             "steps": self._tick,
-            "ttft_ms": {"p50": self._ttft.percentile(50),
-                        "p99": self._ttft.percentile(99),
-                        "n": self._ttft.count},
-            "tok_latency_ms": {"p50": self._tok_lat.percentile(50),
-                               "p99": self._tok_lat.percentile(99)},
+            "ttft_ms": self._ttft.quantiles(),
+            "tok_latency_ms": self._tok_lat.quantiles(),
             "tok_per_s": (toks / secs) if secs > 0 else None,
             "policy": self.policy.as_dict() if self.policy else None,
         }
+        if self.pool_kind == "paged":
+            out["prefill_chunks"] = self._counts["prefill_chunks"]
+            out["prefilling"] = len(self._prefilling)
+            out["pool"] = self.pool.utilization()
+            if self.draft_pool is not None:
+                q = self._spec_hist.quantiles()
+                q["mean"] = self._spec_hist.mean
+                out["spec_accepted"] = q
+        return out
 
     def run(self, max_steps: Optional[int] = None) -> Dict[int, List[int]]:
         """Drive until every submitted request retires; returns

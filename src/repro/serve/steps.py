@@ -12,9 +12,11 @@ parameters.
 from repro.train.serve import (  # noqa: F401
     ServeStep,
     build_decode_step,
+    build_paged_step,
     build_prefill_step,
     cache_specs,
     pad_prefill_caches,
+    paged_cache_specs,
     serve_batch_specs,
     serve_shape_policy,
 )

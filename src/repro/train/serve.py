@@ -166,6 +166,70 @@ def build_decode_step(model: Model, mesh,
                      out_specs=(logit_spec, c_specs), run_spec=rs)
 
 
+def paged_cache_specs(model: Model, kv_axes) -> Dict[str, Any]:
+    """PartitionSpec tree matching ``model.paged_cache_shapes``.
+
+    The arena's page dim is UNSHARDED (any slot's table may point at any
+    physical page); the within-page token dim shards over ``kv_axes`` —
+    the same split-KV ownership decode_attend uses, at page granularity.
+    With extra mesh axes (e.g. 'data') the arena is replicated across
+    them: every shard runs the identical paged step on identical inputs,
+    so the replicas stay bit-equal without any cross-axis traffic.
+    """
+    kv = _opt(kv_axes)
+
+    def for_kind(kind: str, stacked: bool):
+        if kind != "attn":
+            raise ValueError(f"paged caches are attn-only, got {kind!r}")
+        L = (None,) if stacked else ()
+        s = P(*L, None, kv, None, None)
+        return {"k": s, "v": s}
+
+    blocks = tuple(for_kind(k, True) for k in model.period)
+    rem = tuple(for_kind(k, False) for k in model.period[: model.rem]) \
+        if model.rem_spec else None
+    return {"blocks": blocks, "rem": rem}
+
+
+def build_paged_step(model: Model, mesh,
+                     kv_axes: Tuple[str, ...],
+                     donate: bool = True,
+                     prefetch: Optional[int] = None) -> ServeStep:
+    """Paged multi-token step: (params, arena, batch, page_table,
+    start_pos) -> ((B, T, V) logits, new arena).
+
+    ONE builder covers every paged workload — the engine calls it with
+    T=1 (batched decode), T=gamma+1 (speculative verify) and B=1/T=chunk
+    (chunked prefill); each (B, T) shape compiles once.  The slot->page
+    indirection is resolved INSIDE the jitted step (gather + scatter by
+    physical page id, models/attention.py paged_*), so the host only
+    uploads the small int32 table.  Batch stays unsharded: the arena is
+    one global pool whose pages any row may reference, which is
+    incompatible with slicing pages per batch shard.
+    """
+    if prefetch is not None:
+        model = model.with_prefetch(prefetch)
+    rs = RunSpec(mode="paged", kv_axes=tuple(kv_axes))
+    p_specs = param_specs(model, tuple(mesh.axis_names))
+    b_specs = serve_batch_specs(model, (), ())
+    c_specs = paged_cache_specs(model, kv_axes)
+    logit_spec = P(None, None, None)
+    table_spec = P(None, None)
+    pos_spec = P(None)
+
+    def stepf(params, caches, batch, table, start_pos):
+        return model.paged_fn(params, caches, batch, table, start_pos, rs)
+
+    in_specs = (p_specs, c_specs, b_specs, table_spec, pos_spec)
+    sm = shard_map(stepf, mesh=mesh,
+                   in_specs=in_specs,
+                   out_specs=(logit_spec, c_specs),
+                   check_vma=False)
+    fn = jax.jit(sm, donate_argnums=(1,) if donate else ())
+    return ServeStep(fn=fn, mesh=mesh, in_specs=in_specs,
+                     out_specs=(logit_spec, c_specs), run_spec=rs)
+
+
 def pad_prefill_caches(model: Model, caches, kv_len: int):
     """Grow prefill KV caches (length = prompt) to decode capacity.
 

@@ -210,8 +210,22 @@ def train_ledger(model, mesh_sizes: Mapping[str, int],
 def serve_ledger(model, mesh_sizes: Mapping[str, int],
                  n_slots: int, kv_len: int,
                  cache_itemsize: int = 2,
-                 budget_bytes: int = HBM_BYTES) -> HBMLedger:
-    """Per-device serving HBM bill: bf16 weight shard + KV pool + rings."""
+                 budget_bytes: int = HBM_BYTES,
+                 page_size: Optional[int] = None,
+                 n_pages: Optional[int] = None,
+                 kv_axes: Sequence[str] = ()) -> HBMLedger:
+    """Per-device serving HBM bill: bf16 weight shard + KV pool + rings.
+
+    With ``page_size``/``n_pages`` set, the KV line charges the *paged*
+    arena instead of the whole-slot slab: ``n_pages`` pages of
+    ``page_size`` positions each, plus the host-side page table
+    (``n_slots x kv_len/page_size`` int32 slot rows — charged even though
+    it lives off-device, because the jitted step stages a copy per call).
+    The arena shards only its within-page token dim over ``kv_axes`` and
+    is replicated across every other mesh axis, so the per-device divisor
+    is the kv-axes world, not the full world (matches
+    ``serve.PagedKVPool`` / ``train/serve.paged_cache_specs``).
+    """
     import numpy as np
 
     world = _group_size(mesh_sizes, mesh_sizes.keys())
@@ -221,12 +235,30 @@ def serve_ledger(model, mesh_sizes: Mapping[str, int],
                    f"bf16 inference weight shard / {world} devices"),
     ]
     import jax
-    kv = model.cache_shapes(n_slots, kv_len)
-    kv_bytes = sum(int(np.prod(l.shape)) * cache_itemsize
-                   for l in jax.tree.leaves(kv))
-    lines.append(LedgerLine(
-        "kv_pool", kv_bytes // world,
-        f"{n_slots} slots x {kv_len} positions KV / {world} devices"))
+    if page_size is not None:
+        if kv_len % page_size:
+            raise ValueError(f"kv_len {kv_len} % page_size {page_size} != 0")
+        pages_per_slot = kv_len // page_size
+        if n_pages is None:
+            n_pages = n_slots * pages_per_slot
+        page_bytes = sum(int(np.prod(l.shape)) * cache_itemsize
+                         for l in jax.tree.leaves(
+                             model.cache_shapes(1, page_size)))
+        kv_world = _group_size(mesh_sizes, kv_axes)
+        table_bytes = n_slots * pages_per_slot * 4
+        lines.append(LedgerLine(
+            "kv_pool",
+            (n_pages * page_bytes) // kv_world + table_bytes,
+            f"{n_pages} pages x {page_size} positions KV / {kv_world} "
+            f"kv-axis devices + {n_slots}x{pages_per_slot} int32 page "
+            f"table"))
+    else:
+        kv = model.cache_shapes(n_slots, kv_len)
+        kv_bytes = sum(int(np.prod(l.shape)) * cache_itemsize
+                       for l in jax.tree.leaves(kv))
+        lines.append(LedgerLine(
+            "kv_pool", kv_bytes // world,
+            f"{n_slots} slots x {kv_len} positions KV / {world} devices"))
     rlines, rings = ring_lines(model)
     # inference scans ring the forward gathers only — no backward grads
     rlines = [l for l in rlines if "grads" not in l.name]

@@ -366,6 +366,45 @@ def test_stochastic_dispatch_determinism():
     assert not np.array_equal(np.asarray(again[0]), np.asarray(other[0]))
 
 
+@pytest.mark.parametrize("bits_in,bits_out", [(4, 4), (4, 8), (8, 4)])
+def test_stochastic_fused_dequant_reduce_quant(bits_in, bits_out):
+    """The fused qgZ intra-hop op now threads stochastic rounding through
+    the kernel path too: the uniform field is drawn on the reference's
+    flat (C,) segmentation and requantization happens in-kernel, so a
+    fixed key gives bit-identical payloads AND scales across backends —
+    this closed the last stochastic xla fallback."""
+    from repro.kernels import ops
+    from repro.obs.metrics import get_registry
+    cfg_in = QuantConfig(bits=bits_in, block_size=64)
+    cfg_out = QuantConfig(bits=bits_out, block_size=64, stochastic=True)
+    x = _rand((4, 512), jnp.float32, seed=11)
+    p, s = ref.quantize_ref(x, cfg_in)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+    outs = {}
+    for be in ("xla", "interpret"):
+        with ops.use_backend(be):
+            before = get_registry().counter(
+                f"kernels.dispatch.dequant_reduce_quant.{be}").value
+            outs[be] = jax.jit(lambda pp, ss, k: ops.dequant_reduce_quant(
+                pp, ss, cfg_in, cfg_out, k))(p, s, k1)
+            after = get_registry().counter(
+                f"kernels.dispatch.dequant_reduce_quant.{be}").value
+            # the interpret dispatch must NOT fall back to xla any more
+            assert after == before + 1, (be, before, after)
+    np.testing.assert_array_equal(np.asarray(outs["xla"][0]),
+                                  np.asarray(outs["interpret"][0]))
+    np.testing.assert_array_equal(np.asarray(outs["xla"][1]),
+                                  np.asarray(outs["interpret"][1]))
+    with ops.use_backend("interpret"):
+        again = jax.jit(lambda pp, ss, k: ops.dequant_reduce_quant(
+            pp, ss, cfg_in, cfg_out, k))(p, s, k1)
+        other = jax.jit(lambda pp, ss, k: ops.dequant_reduce_quant(
+            pp, ss, cfg_in, cfg_out, k))(p, s, k2)
+    np.testing.assert_array_equal(np.asarray(outs["interpret"][0]),
+                                  np.asarray(again[0]))
+    assert not np.array_equal(np.asarray(again[0]), np.asarray(other[0]))
+
+
 # ---------------------------------------------------------------------------
 # multi-segment shapes + tile-boundary-crossing blocks
 # ---------------------------------------------------------------------------

@@ -52,6 +52,30 @@ def test_histogram_window_and_percentiles():
     assert Histogram("e").mean is None
 
 
+def test_histogram_quantiles_match_numpy():
+    """quantiles() is the nearest-rank export ServeEngine.stats() ships:
+    with 101 distinct samples every requested quantile must agree with
+    numpy's 'nearest' percentile exactly."""
+    import numpy as np
+    rng = np.random.default_rng(3)
+    xs = rng.permutation(101).astype(float)   # 0..100, shuffled
+    h = Histogram("q", window=256)
+    for v in xs:
+        h.observe(v)
+    q = h.quantiles((50, 90, 99))
+    assert q["n"] == 101
+    for p in (50, 90, 99):
+        assert q[f"p{p}"] == np.percentile(xs, p, method="nearest")
+    # default keys + empty-histogram shape
+    assert set(Histogram("e").quantiles()) == {"p50", "p90", "p99", "n"}
+    assert Histogram("e").quantiles()["p50"] is None
+    # windowing: quantiles see only the last `window` samples
+    hw = Histogram("w", window=4)
+    for v in (1, 2, 3, 4, 100):
+        hw.observe(v)
+    assert hw.quantiles((0,))["p0"] == 2 and hw.quantiles((0,))["n"] == 5
+
+
 def test_registry_create_on_use_and_snapshot():
     r = Registry()
     r.counter("a.n").inc(3)

@@ -169,6 +169,45 @@ def test_train_ledger_charges_every_line():
     assert led.fits and led.headroom == 16 * GB - led.total
 
 
+def test_serve_ledger_paged_matches_hand_count():
+    """Page-granularity KV charge vs a hand-counted oracle:
+
+      page_bytes = 2 (k+v) * n_layers * page_size * n_kv_heads * d_head
+                   * itemsize
+      kv_pool    = n_pages * page_bytes / |kv_axes| + n_slots * Pm * 4
+
+    and the full-capacity paged pool over ALL mesh axes must bill exactly
+    the slab line plus the page table (same bytes, different granularity).
+    """
+    from repro.tune import serve_ledger
+    arch = _arch()
+    z = ZeroConfig(dp_axes=AXES2)
+    model = Model(arch, z, world=8)
+    sizes = {"data": 4, "model": 2}
+    n_slots, kv_len, page = 8, 64, 16
+    pm = kv_len // page                      # pages per slot
+    page_bytes = 2 * arch.n_layers * page * arch.n_kv_heads * arch.d_head * 2
+    table = n_slots * pm * 4
+
+    led = serve_ledger(model, sizes, n_slots=n_slots, kv_len=kv_len,
+                       page_size=page, n_pages=12, kv_axes=("model",),
+                       budget_bytes=16 * GB)
+    assert led.line("kv_pool") == 12 * page_bytes // 2 + table
+
+    # default n_pages = full capacity; kv_axes spanning the whole mesh
+    # degenerates to the slab charge + table ints
+    slab = serve_ledger(model, sizes, n_slots=n_slots, kv_len=kv_len,
+                        budget_bytes=16 * GB)
+    full = serve_ledger(model, sizes, n_slots=n_slots, kv_len=kv_len,
+                        page_size=page, kv_axes=AXES2,
+                        budget_bytes=16 * GB)
+    assert full.line("kv_pool") == slab.line("kv_pool") + table
+
+    with pytest.raises(ValueError):
+        serve_ledger(model, sizes, n_slots=n_slots, kv_len=kv_len,
+                     page_size=24)           # 64 % 24 != 0
+
+
 def test_moe_ledger_has_expert_ring():
     """MoE models ring the nested expert-chunk scan too."""
     arch = get_config("deepseek-moe-16b").reduced()
